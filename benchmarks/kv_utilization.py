@@ -1,0 +1,31 @@
+"""Paper §III.C claim: contiguous pre-allocation stores only 20.4-38.2% of
+KV memory as real tokens; paging fixes this. Measured on identical
+workloads through the real allocators."""
+
+from __future__ import annotations
+
+from repro.serving.simulator import (make_workload, simulate_paged,
+                                     simulate_prealloc)
+
+
+def run(verbose: bool = True):
+    wl = lambda: make_workload(300, rate=8.0, dist="sharegpt", seed=3)
+    rows = {}
+    r = simulate_paged(wl(), num_blocks=2048, block_size=16)
+    rows["vLLM-paged"] = r.kv_utilization
+    for pol in ("oracle", "pow2", "max"):
+        r = simulate_prealloc(wl(), total_slots=2048 * 16, policy=pol)
+        rows[f"orca-{pol}"] = r.kv_utilization
+    if verbose:
+        print("KV-memory utilization (fraction of reserved slots holding "
+              "real tokens):")
+        for k, v in rows.items():
+            marker = ""
+            if k == "orca-max" and 0.15 <= v <= 0.45:
+                marker = "   <- paper reports 20.4%-38.2% for this system"
+            print(f"  {k:12s} {v:6.1%}{marker}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+
+def load(outdir: str = "experiments/dryrun"):
+    recs = {}
+    for f in glob.glob(os.path.join(outdir, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def run(outdir: str = "experiments/dryrun", verbose: bool = True):
+    recs = load(outdir)
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = recs.get((arch, shape, "16x16"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                rows.append(dict(arch=arch, shape=shape, status="skipped"))
+                continue
+            roof = r["roofline"]
+            rows.append(dict(
+                arch=arch, shape=shape, status="ok",
+                t_comp=roof["t_compute_s"], t_mem=roof["t_memory_s"],
+                t_coll=roof["t_collective_s"],
+                bottleneck=roof["bottleneck"],
+                useful=r.get("useful_flop_frac", float("nan")),
+                hbm=r.get("hbm_per_device_gib", float("nan")),
+                multi_pod_ok=(arch, shape, "2x16x16") in recs and
+                recs[(arch, shape, "2x16x16")]["status"] in ("ok", "skipped"),
+            ))
+    if verbose:
+        hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+               f"{'t_coll':>9s} {'bound':>10s} {'useful':>7s} {'HBM/dev':>8s} mp")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            if r["status"] == "skipped":
+                print(f"{r['arch']:24s} {r['shape']:12s} "
+                      f"{'(skipped: long-ctx n/a)':>40s}")
+                continue
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['t_comp']:9.4f} "
+                  f"{r['t_mem']:9.4f} {r['t_coll']:9.4f} "
+                  f"{r['bottleneck']:>10s} {r['useful']:7.2f} "
+                  f"{r['hbm']:7.1f}G {'Y' if r['multi_pod_ok'] else '-'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark driver — one entry per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end (us_per_call =
+benchmark wall time; derived = the benchmark's headline metric).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    import benchmarks.chain_compare as chain_compare
+    import benchmarks.kv_utilization as kv_utilization
+    import benchmarks.orca_scheduling as orca_scheduling
+    import benchmarks.serving_fig9 as serving_fig9
+    import benchmarks.serving_fig10 as serving_fig10
+    import benchmarks.roofline_report as roofline_report
+
+    csv_rows = []
+
+    def bench(name, fn, derive):
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.monotonic()
+        out = fn()
+        us = (time.monotonic() - t0) * 1e6
+        try:
+            derived = derive(out)
+        except Exception:  # pragma: no cover - derived metric best-effort
+            derived = "n/a"
+        csv_rows.append((name, us, derived))
+        return out
+
+    bench("chain_nsga2_vs_dijkstra (paper §II.B.5)",
+          lambda: chain_compare.run(n_fleets=6),
+          lambda out: f"hv_ratio={out[1]['hv_ga']/max(out[1]['hv_base'],1e-9):.2f}x")
+
+    bench("serving_fig9_paged_vs_orca",
+          lambda: serving_fig9.run(n_requests=300),
+          lambda out: "latency_curves=%d" % sum(len(v) for v in out.values()))
+
+    bench("kv_utilization (§III.C 20.4-38.2%)",
+          kv_utilization.run,
+          lambda out: f"orca_max={out['orca-max']:.1%},paged={out['vLLM-paged']:.1%}")
+
+    bench("serving_fig10_distkv",
+          lambda: serving_fig10.run(n_requests=200),
+          lambda out: "max_gain=%.2fx" % max(r["gain"] for r in out))
+
+    bench("orca_iteration_vs_batch",
+          orca_scheduling.run,
+          lambda out: "batch/iter=%.1fx" % max(
+              r["batch_lat"] / r["iter_lat"] for r in out))
+
+    bench("roofline_report (dry-run artifacts)",
+          roofline_report.run,
+          lambda out: "rows=%d" % len(out))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end training driver: ~100M-parameter dense model, a few hundred
+steps on the packed synthetic corpus, with checkpointing and resume.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.training import checkpoint
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    # ~100M params: danube family scaled down (8L, d=768)
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-1.8b"),
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32000, sliding_window=512)
+    n = cfg.n_params()
+    print(f"model: {n/1e6:.0f}M params")
+
+    tcfg = TrainConfig(
+        steps=args.steps, log_every=20, ckpt_every=100,
+        ckpt_dir=args.ckpt_dir,
+        opt=OptConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps))
+    res = train(cfg, tcfg, batch_override={"seq_len": 256, "global_batch": 8})
+    first, last = res["losses"][0][1], res["losses"][-1][1]
+    print(f"\nloss {first:.3f} -> {last:.3f} in {res['wall_s']:.0f}s")
+    step = checkpoint.latest_step(args.ckpt_dir)
+    print(f"latest checkpoint: step {step}")
+
+
+if __name__ == "__main__":
+    main()

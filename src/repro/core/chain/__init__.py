@@ -1,0 +1,6 @@
+from repro.core.chain.registry import Fleet, ServerInfo, make_fleet  # noqa: F401
+from repro.core.chain.baseline import Chain, find_best_chain  # noqa: F401
+from repro.core.chain.nsga2 import nsga2, hypervolume_2d  # noqa: F401
+from repro.core.chain.tradeoff import (  # noqa: F401
+    ChainSequenceProblem, latency_throughput_tradeoff, decode_chain,
+    knee_chain)

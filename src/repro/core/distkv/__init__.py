@@ -1,0 +1,5 @@
+from repro.core.distkv.gmanager import GManager, Heartbeat, DebtEntry  # noqa: F401
+from repro.core.distkv.rmanager import RManager, RBlock, SeqKV  # noqa: F401
+from repro.core.distkv.dist_attention import (  # noqa: F401
+    dist_attention, dist_attention_ref, micro_attention_partial,
+    merge_partials, merge_partials_tree)

@@ -1,0 +1,133 @@
+"""InfiniteLLM rManager: per-instance rBlock virtualization (paper §III.D.3).
+
+Each LLM service instance owns a local :class:`BlockAllocator` and virtualizes
+it behind **rBlocks** — (instance_id, physical_block) pairs with metadata. On
+local exhaustion the rManager turns debtor: asks the gManager for creditor
+candidates and borrows physical blocks that live on a *remote* instance.
+Attention over borrowed blocks is exactly the DistAttention micro-attention
+path (``dist_attention.py``): partial (m, l, o) computed where the block
+lives, merged by log-sum-exp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.distkv.gmanager import GManager, Heartbeat
+from repro.core.paging.allocator import BlockAllocator, OutOfBlocks
+
+
+@dataclasses.dataclass(frozen=True)
+class RBlock:
+    """The paper's rBlock metadata: ids + physical location."""
+    rblock_id: int
+    instance_id: int  # owning (home) instance of the *sequence*
+    device_id: int    # instance where the physical block lives
+    physical_id: int
+
+
+@dataclasses.dataclass
+class SeqKV:
+    """A sequence's logical KV: ordered rBlocks (possibly multi-instance)."""
+    rblocks: List[RBlock] = dataclasses.field(default_factory=list)
+    num_tokens: int = 0
+
+
+class RManager:
+    def __init__(self, instance_id: int, allocator: BlockAllocator,
+                 gmanager: GManager):
+        self.instance_id = instance_id
+        self.allocator = allocator
+        self.g = gmanager
+        self.peers: Dict[int, "RManager"] = {}
+        self._next_rblock = 0
+        self.seqs: Dict[int, SeqKV] = {}
+        self.heartbeat()
+
+    def register_peers(self, peers: Dict[int, "RManager"]) -> None:
+        self.peers = peers
+
+    def heartbeat(self) -> None:
+        self.g.heartbeat(Heartbeat(self.instance_id,
+                                   self.allocator.num_free,
+                                   self.allocator.num_blocks))
+
+    # -- lending side -----------------------------------------------------------
+    def try_lend(self, debtor: int) -> Optional[int]:
+        """Allocate one local physical block on behalf of ``debtor``."""
+        if self.allocator.num_free <= self.g.safety_free:
+            return None
+        b = self.allocator.alloc_block()
+        self.g.record_loan(self.instance_id, debtor, 1)
+        self.heartbeat()
+        return b
+
+    def repay(self, creditor: int, physical_id: int) -> None:
+        self.peers[creditor].allocator.decref(physical_id)
+        self.g.record_repayment(creditor, self.instance_id, 1)
+        self.peers[creditor].heartbeat()
+
+    # -- borrowing side -----------------------------------------------------------
+    def _alloc_one(self) -> RBlock:
+        rid = self._next_rblock
+        self._next_rblock += 1
+        try:
+            phys = self.allocator.alloc_block()
+            self.heartbeat()
+            return RBlock(rid, self.instance_id, self.instance_id, phys)
+        except OutOfBlocks:
+            pass
+        # debtor path: ask the gManager for up to 3 creditors, try in order
+        for cred in self.g.recommend_creditors(self.instance_id, 1):
+            phys = self.peers[cred].try_lend(self.instance_id)
+            if phys is not None:
+                return RBlock(rid, self.instance_id, cred, phys)
+        raise OutOfBlocks(f"instance {self.instance_id}: no local or remote "
+                          f"blocks available")
+
+    # -- sequence API ---------------------------------------------------------------
+    def append_tokens(self, seq_id: int, new_tokens: int) -> List[RBlock]:
+        """Grow a sequence; returns newly-allocated rBlocks. Atomic: if the
+        cluster cannot supply all needed blocks, everything allocated so far
+        is returned/repaid and OutOfBlocks propagates."""
+        kv = self.seqs.setdefault(seq_id, SeqKV())
+        bs = self.allocator.block_size
+        total = kv.num_tokens + new_tokens
+        need = -(-total // bs) - len(kv.rblocks)
+        added: List[RBlock] = []
+        try:
+            for _ in range(need):
+                rb = self._alloc_one()
+                added.append(rb)
+        except OutOfBlocks:
+            for rb in added:  # roll back
+                if rb.device_id == self.instance_id:
+                    self.allocator.decref(rb.physical_id)
+                else:
+                    self.repay(rb.device_id, rb.physical_id)
+            self.heartbeat()
+            raise
+        kv.rblocks.extend(added)
+        kv.num_tokens = total
+        return added
+
+    def free_seq(self, seq_id: int) -> None:
+        kv = self.seqs.pop(seq_id, None)
+        if kv is None:
+            return
+        for rb in kv.rblocks:
+            if rb.device_id == self.instance_id:
+                self.allocator.decref(rb.physical_id)
+            else:
+                self.repay(rb.device_id, rb.physical_id)
+        self.heartbeat()
+
+    # -- stats ------------------------------------------------------------------
+    def remote_fraction(self, seq_id: int) -> float:
+        kv = self.seqs.get(seq_id)
+        if not kv or not kv.rblocks:
+            return 0.0
+        remote = sum(1 for rb in kv.rblocks
+                     if rb.device_id != self.instance_id)
+        return remote / len(kv.rblocks)

@@ -1,0 +1,2 @@
+from repro.core.paging.allocator import (  # noqa: F401
+    BlockAllocator, BlockTable, ContiguousPreallocAllocator, OutOfBlocks)

@@ -1,0 +1,149 @@
+"""ORCA iteration-level scheduler (paper §III.B Sol1) with selective batching.
+
+Each call to :meth:`schedule` plans exactly ONE engine iteration: which
+waiting requests to prefill (initiation phase) and which running requests to
+advance by one token (increment phase). Early-finished requests leave the
+batch immediately; late-joining requests enter at the next iteration — the
+exact fix for ORCA's challenge C1.
+
+Selective batching (Sol2) shows up as the *token budget*: attention is
+per-sequence (paged cache), while MLP/linear layers run over the flattened
+token buffer, so the scheduler bounds ``sum(prompt lens) + #decodes`` per
+iteration rather than the sequence count.
+
+Memory is delegated to a :class:`BlockAllocator` (vLLM §III.C) or any object
+with the same interface; preemption-by-recompute evicts the youngest request
+when pages run out (vLLM's recompute policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.paging.allocator import BlockAllocator, BlockTable
+from repro.core.scheduling.request import Phase, Request
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    prefill: List[Request]
+    decode: List[Request]
+    preempted: List[Request]
+
+    @property
+    def empty(self) -> bool:
+        return not (self.prefill or self.decode)
+
+    def token_count(self) -> int:
+        return sum(r.prompt_len for r in self.prefill) + len(self.decode)
+
+
+class IterationScheduler:
+    def __init__(self, allocator: BlockAllocator, *,
+                 max_running: int = 64,
+                 max_tokens_per_iter: int = 8192,
+                 watermark: float = 0.01):
+        self.allocator = allocator
+        self.max_running = max_running
+        self.max_tokens = max_tokens_per_iter
+        self.watermark_blocks = max(1, int(allocator.num_blocks * watermark))
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.tables: Dict[int, BlockTable] = {}
+
+    # -- client API -------------------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        req.phase = Phase.WAITING
+        self.waiting.append(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        req.phase = Phase.FINISHED
+        req.finish_time = now
+        if req.request_id in self.tables:
+            self.allocator.free_table(self.tables.pop(req.request_id))
+        if req in self.running:
+            self.running.remove(req)
+
+    # -- one iteration ------------------------------------------------------------
+    def schedule(self) -> IterationPlan:
+        prefill: List[Request] = []
+        decode: List[Request] = []
+        preempted: List[Request] = []
+        budget = self.max_tokens
+
+        # 1) running decodes first (latency priority), preempting if needed
+        for req in list(self.running):
+            if budget <= 0:
+                break
+            if req.request_id not in self.tables:
+                continue  # became a preemption victim earlier this iteration
+            table = self.tables[req.request_id]
+            if not self.allocator.can_append(table, 1):
+                victim = self._preempt_youngest(exclude=req)
+                if victim is None or not self.allocator.can_append(table, 1):
+                    # preempt this request itself
+                    self._preempt(req)
+                    preempted.append(req)
+                    continue
+                preempted.append(victim)
+            self.allocator.append_tokens(table, 1)
+            decode.append(req)
+            budget -= 1
+
+        # 2) admit waiting requests (FCFS) into leftover budget + memory
+        while (self.waiting and budget > 0
+               and len(self.running) < self.max_running):
+            req = self.waiting[0]
+            need_tokens = req.prompt_len
+            if need_tokens > budget:
+                break
+            table = BlockTable()
+            if (self.allocator.blocks_needed(table, need_tokens)
+                    > self.allocator.num_free - self.watermark_blocks):
+                break
+            self.waiting.pop(0)
+            self.allocator.append_tokens(table, need_tokens)
+            self.tables[req.request_id] = table
+            req.phase = Phase.INITIATION
+            self.running.append(req)
+            prefill.append(req)
+            budget -= need_tokens
+
+        return IterationPlan(prefill=prefill, decode=decode,
+                             preempted=preempted)
+
+    def complete_iteration(self, plan: IterationPlan, now: float) -> List[Request]:
+        """Mark phases + retire finished requests. Returns finished list."""
+        finished = []
+        for req in plan.prefill:
+            req.phase = Phase.INCREMENT
+            if req.first_token_time is None:
+                req.first_token_time = now
+        for req in plan.prefill + plan.decode:
+            if req.done:
+                self.finish(req, now)
+                finished.append(req)
+        return finished
+
+    # -- preemption ----------------------------------------------------------------
+    def _preempt(self, req: Request) -> None:
+        req.phase = Phase.PREEMPTED
+        req.preemptions += 1
+        # recompute policy: drop pages; generated tokens move into the prompt
+        req.prompt = (req.prompt + req.output) if req.prompt else req.prompt
+        req.prompt_len = req.context_len
+        req.max_new_tokens -= req.n_generated
+        req.committed_output.extend(req.output)
+        req.output = []
+        self.allocator.free_table(self.tables.pop(req.request_id))
+        if req in self.running:
+            self.running.remove(req)
+        self.waiting.insert(0, req)
+
+    def _preempt_youngest(self, exclude: Request) -> Optional[Request]:
+        for req in reversed(self.running):
+            if req is not exclude:
+                self._preempt(req)
+                return req
+        return None

@@ -1,0 +1,69 @@
+"""Request model shared by the scheduler, engine, and simulator (ORCA §III.B)."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"      # queued, not yet prefilled
+    INITIATION = "initiation"  # prefill (ORCA's term)
+    INCREMENT = "increment"    # autoregressive decode
+    PREEMPTED = "preempted"    # pages reclaimed, must re-prefill
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    arrival_time: float
+    prompt: List[int]  # token ids (simulator may leave this empty)
+    max_new_tokens: int
+    prompt_len: Optional[int] = None  # simulator-only requests set this
+    eos_token: Optional[int] = None
+    n_samples: int = 1  # parallel sampling (KV shared via COW)
+
+    phase: Phase = Phase.WAITING
+    output: List[int] = dataclasses.field(default_factory=list)
+    # tokens generated before a preemption (they re-enter as prompt on
+    # recompute but still belong to the client-visible output)
+    committed_output: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if self.prompt_len is None:
+            self.prompt_len = len(self.prompt)
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.output)
+
+    @property
+    def full_output(self) -> List[int]:
+        return self.committed_output + self.output
+
+    @property
+    def total_generated(self) -> int:
+        return len(self.committed_output) + len(self.output)
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.n_generated
+
+    @property
+    def done(self) -> bool:
+        if self.n_generated >= self.max_new_tokens:
+            return True
+        return bool(self.output and self.eos_token is not None
+                    and self.output[-1] == self.eos_token)
+
+    def normalized_latency(self) -> Optional[float]:
+        """Paper Fig. 9 metric: end-to-end latency / output length."""
+        if self.finish_time is None:
+            return None
+        return (self.finish_time - self.arrival_time) / max(
+            self.total_generated, 1)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens, *,
+                        page_size: int, window: Optional[int] = None):
+    """q: (B,H,Dh); pages: (P, ps, Hkv, Dh); block_tables: (B, n); lens: (B,)."""
+    b, h, dh = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    n = block_tables.shape[1]
+    smax = n * page_size
+
+    # gather the logical KV for each sequence
+    k = k_pages[block_tables]  # (B, n, ps, Hkv, Dh)
+    v = v_pages[block_tables]
+    k = k.reshape(b, smax, hkv, dh).astype(jnp.float32)
+    v = v.reshape(b, smax, hkv, dh).astype(jnp.float32)
+
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < context_lens[:, None]
+    if window is not None:
+        valid &= pos[None, :] > context_lens[:, None] - 1 - window
+
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k) / (dh ** 0.5)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+def flash_prefill_ref(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None):
+    """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh)."""
+    b, s, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / (dh ** 0.5)
+    qpos, kpos = jnp.arange(s), jnp.arange(skv)
+    mask = jnp.ones((s, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, like the kernel
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential (non-chunked) SSD recurrence oracle.
+
+    x: (b,l,h,p); dt: (b,l,h) fp32 post-softplus; A: (h,); B,C: (b,l,g,n).
+    Returns y: (b,l,h,p), final_state: (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * A)  # (b,h)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), final

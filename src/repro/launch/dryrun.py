@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes; print memory/cost analysis; emit roofline JSON.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import, including jax, because jax locks the device count on first
+init). Never import this module from tests/benches.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-large-123b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every combination
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config,  # noqa: E402
+                           input_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.training import optimizer  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+
+def _eval_shape_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def skip_reason(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full quadratic attention at 524k decode is out of scope for "
+                "this arch (no sliding-window/SSM path) — see DESIGN.md §4")
+    return ""
+
+
+def _cap_plan(model: Model, cap: int) -> int:
+    """Cap every stacked segment at ``cap`` layers (for cost extrapolation).
+    Returns total layer count of the capped plan."""
+    import dataclasses as dc
+    model.plan = [dc.replace(s, n=min(s.n, cap)) for s in model.plan]
+    model.enc_plan = [dc.replace(s, n=min(s.n, cap))
+                      for s in model.enc_plan]
+    return sum(s.n for s in model.plan + model.enc_plan)
+
+
+def build(cfg, shape, mesh, *, unroll: bool = False, cap: int = 0):
+    """Returns (jitted_fn, arg_specs: tuple, arg_shardings: tuple).
+
+    ``unroll``: fully unroll layer scans (XLA costs a while body once
+    regardless of trip count, so FLOPs/collective bytes need unrolled HLO).
+    ``cap``: cap stacked segments at this many layers — the dry-run compiles
+    capped-unrolled variants at 2 and 4 layers and extrapolates linearly
+    (exact, since layers within a segment are structurally identical).
+    Returns the capped total layer count as the 3rd element when cap>0."""
+    from repro.models import attention as _attn
+    _attn.CHUNK_UNROLL = unroll  # count every attention chunk (see module doc)
+    model = Model(cfg, remat=(shape.kind == "train"), unroll_layers=unroll)
+    n_layers = None
+    if cap:
+        n_layers = _cap_plan(model, cap)
+    policy = shd.MeshPolicy(mesh, cfg, decode=shape.kind == "decode",
+                            megatron=os.environ.get("REPRO_LAYOUT",
+                                                    "megatron") == "megatron")
+    p_shape = _eval_shape_params(model)
+    p_shard = shd.param_shardings(p_shape, mesh, cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        o_shape = jax.eval_shape(optimizer.init, p_shape)
+        o_shard = shd.param_shardings(o_shape, mesh, cfg)
+        b_shard = shd.batch_shardings(specs, mesh, cfg)
+        step = make_train_step(model, optimizer.OptConfig(), policy)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        return fn, (p_shape, o_shape, specs), n_layers
+
+    if shape.kind == "prefill":
+        b_shard = shd.batch_shardings(specs, mesh, cfg)
+
+        def prefill_step(params, batch):
+            return model.prefill(
+                params, batch["tokens"],
+                seq_capacity=shape.seq_len,
+                media=batch.get("media"),
+                encoder_tokens=batch.get("encoder_tokens"),
+                policy=policy)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+        return fn, (p_shape, specs), n_layers
+
+    # decode: one new token against a seq_len cache
+    enc_len = (shape.seq_len // 4) if cfg.is_encdec else 0
+    cache_specs = model.init_cache(shape.global_batch, shape.seq_len,
+                                   as_specs=True, enc_len=enc_len)
+    c_shard = shd.cache_shardings(cache_specs, mesh, cfg,
+                                  shape.global_batch)
+    b_shard = shd.batch_shardings(specs, mesh, cfg)
+
+    def serve_step(params, caches, batch):
+        return model.decode_step(params, batch["tokens"],
+                                 batch["positions"], caches,
+                                 policy=policy)
+
+    fn = jax.jit(serve_step, in_shardings=(p_shard, c_shard, b_shard),
+                 donate_argnums=(1,))
+    return fn, (p_shape, cache_specs, specs), n_layers
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _write(rec, outdir)
+        if verbose:
+            print(f"SKIP {arch} {shape_name} {mesh_name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.monotonic()
+    with jax.sharding.set_mesh(mesh):
+        # 1) deployable scan version: memory analysis + compile timing
+        fn, arg_specs, _ = build(cfg, shape, mesh)
+        lowered = fn.lower(*arg_specs)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        # 2) cost model: capped-unrolled variants at 2 and 4 layers per
+        # segment; per-layer cost is exact within a segment, so the full
+        # model's FLOPs/bytes/collectives extrapolate linearly.
+        roof = None
+        if not multi_pod:  # roofline table is single-pod (spec)
+            fn2, specs2, l2 = build(cfg, shape, mesh, unroll=True, cap=2)
+            c2 = fn2.lower(*specs2).compile()
+            r2 = analysis.analyze(c2, chips)
+            fn4, specs4, l4 = build(cfg, shape, mesh, unroll=True, cap=4)
+            c4 = fn4.lower(*specs4).compile()
+            r4 = analysis.analyze(c4, chips)
+            l_full = sum(s.n for s in Model(cfg).plan) + \
+                sum(s.n for s in Model(cfg).enc_plan)
+            roof = analysis.extrapolate(r2, r4, l2, l4, l_full)
+
+    mem = compiled.memory_analysis()
+    mf = analysis.model_flops(cfg, shape)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / chips,
+    })
+    if roof is not None:
+        rec["roofline"] = roof.as_dict()
+        rec["useful_flop_frac"] = (mf / chips) / max(roof.flops, 1.0)
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        temp_b = rec.get("temp_size_in_bytes", 0)
+        rec["hbm_per_device_gib"] = round((args_b + temp_b) / 2**30, 3)
+        rec["fits_16gib"] = (args_b + temp_b) < 16 * 2**30
+    if verbose:
+        msg = (f"OK {arch} {shape_name} {mesh_name}: "
+               f"compile={rec['compile_s']}s "
+               f"hbm/dev={rec.get('hbm_per_device_gib', '?')}GiB")
+        if roof is not None:
+            msg += (f" t_comp={roof.t_compute:.4f}s "
+                    f"t_mem={roof.t_memory:.4f}s "
+                    f"t_coll={roof.t_collective:.4f}s -> {roof.bottleneck}; "
+                    f"useful={rec['useful_flop_frac']:.2f}")
+        print(msg)
+        print("  memory_analysis:", mem)
+    _write(rec, outdir)
+    return rec
+
+
+def _write(rec, outdir):
+    os.makedirs(outdir, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"
+    with open(os.path.join(outdir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.all:
+        fails = []
+        for arch in ARCH_IDS:
+            for shape in INPUT_SHAPES:
+                for mp in (False, True):
+                    try:
+                        run_one(arch, shape, mp, args.out)
+                    except Exception as e:  # noqa: BLE001
+                        print(f"FAIL {arch} {shape} mp={mp}: {e}")
+                        fails.append((arch, shape, mp))
+        if fails:
+            sys.exit(1)
+        return
+    run_one(args.arch, args.shape, args.multi_pod, args.out)
+
+
+if __name__ == "__main__":
+    main()

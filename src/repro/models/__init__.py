@@ -1,0 +1,2 @@
+from repro.models.transformer import Model, Segment, stack_plan  # noqa: F401
+from repro.models.layers import ShardingPolicy, NO_POLICY  # noqa: F401

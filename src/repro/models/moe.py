@@ -1,0 +1,112 @@
+"""Mixture-of-Experts with capacity-based dispatch (expert parallelism).
+
+Top-k routing with a static per-expert capacity so all shapes are
+XLA-friendly; expert weights are stacked ``(E, d, ff)`` and sharded over the
+``model`` mesh axis (expert parallelism). FLOP cost scales with
+``top_k x tokens`` (via capacity), not ``num_experts x tokens`` — the roofline
+sees the *active* compute, as in the real system.
+
+Shared experts (DeepSeek-V2) are a plain dense MLP of width
+``num_shared_experts x moe_d_ff`` applied to every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NO_POLICY, ShardingPolicy, dense_init, mlp, mlp_init
+
+
+def moe_init(cfg, key, dtype):
+    ks = jax.random.split(key, 5)
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "gate": jax.random.normal(ks[1], (e, d, ff), dtype) * scale,
+        "up": jax.random.normal(ks[2], (e, d, ff), dtype) * scale,
+        "down": jax.random.normal(ks[3], (e, ff, d), dtype) * (1.0 / jnp.sqrt(ff)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.num_shared_experts * ff, dtype,
+                               gated=True)
+    return p
+
+
+def capacity(cfg, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_forward(cfg, p, x, *, policy: ShardingPolicy = NO_POLICY,
+                return_aux: bool = False):
+    """x: (B, S, D) -> (B, S, D) [+ aux load-balance loss].
+
+    GShard-style *grouped* dispatch: tokens are split into G groups (the
+    launcher's policy sets G = data-parallel shards), each group computes
+    its own expert positions with a group-local cumsum (no cross-shard
+    sequential dependency) and gets a private slice of every expert's
+    capacity. Dispatch/combine are scatters with ``mode='drop'`` so overflow
+    tokens fall through to the residual without a dummy expert row — keeping
+    the expert axis exactly E for clean expert-parallel sharding.
+
+    Under a mesh policy the expert-parallel ``shard_map`` path
+    (:meth:`MeshPolicy.moe_apply`) replaces this function entirely."""
+    if hasattr(policy, "moe_apply"):
+        out = policy.moe_apply(cfg, p, x, return_aux)
+        if out is not None:
+            return out
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    t = b * s
+    g = getattr(policy, "moe_groups", 1)
+    if t % g:
+        g = 1
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+    cap = max(8, capacity(cfg, tg))
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # group-local position of each (token, choice) in its expert's capacity
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)  # (G, Tg, k, E)
+    flat = onehot.reshape(g, tg * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tg, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)  # (G, Tg, k)
+    keep = pos < cap
+
+    # dispatch: (G, E, cap, D); out-of-capacity scatters are dropped
+    gidx = jnp.broadcast_to(jnp.arange(g)[:, None, None], (g, tg, k))
+    pidx = jnp.where(keep, pos, cap)  # cap is out of range -> mode=drop
+    contrib = jnp.where(keep[..., None], xt[:, :, None, :], 0)
+    disp = jnp.zeros((g, e, cap, d), x.dtype).at[
+        gidx, topi, pidx].add(contrib, mode="drop")
+    disp = policy.act(disp, "expert_gecd")
+
+    # expert MLPs: gated SwiGLU, batched over (G, E)
+    gate = jnp.einsum("gecd,edf->gecf", disp, p["gate"])
+    up = jnp.einsum("gecd,edf->gecf", disp, p["up"])
+    h = jax.nn.silu(gate) * up
+    h = policy.act(h, "expert_gecf")
+    out = jnp.einsum("gecf,efd->gecd", h, p["down"])
+    out = policy.act(out, "expert_gecd")
+
+    # combine: gather each (token, choice)'s slot back (group-local)
+    gathered = out[gidx, topi, jnp.where(keep, pos, 0)]  # (G, Tg, k, D)
+    combined = (gathered * (topv * keep).astype(x.dtype)[..., None]).sum(2)
+    y = combined.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, policy)
+
+    if return_aux:
+        # Switch-style load-balance loss
+        frac_tokens = jnp.mean(
+            jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+        frac_probs = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(frac_tokens * frac_probs)
+        return y, aux
+    return y

@@ -1,0 +1,21 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, key, *, temperature: float = 1.0, top_k: int = 0):
+    """logits: (B, V). temperature<=0 => greedy."""
+    if temperature <= 0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

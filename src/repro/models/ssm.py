@@ -1,0 +1,200 @@
+"""Mamba2 block via SSD (state-space duality) [arXiv:2405.21060].
+
+Chunked SSD: within-chunk terms are computed as masked attention-like
+einsums; across chunks the state recurrence runs as an associative scan —
+both XLA-native so the dry-run roofline sees true costs. Decode is the O(1)
+recurrent update on a persistent ``(B, H, P, N)`` state plus a rolling
+depthwise-conv buffer.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import NO_POLICY, ShardingPolicy, dense, dense_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_dim) rolling input window
+    state: jax.Array  # (B, H, P, N) SSD state (fp32)
+
+
+def ssm_init(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = din + 2 * g * n
+    return {
+        # projects to [z (din), xBC (din + 2*g*n), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * g * n + h, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, float(h), h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[2], din, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    din = cfg.ssm_d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = proj[..., :din]
+    xbc = proj[..., din:din + din + 2 * gn]
+    dt = proj[..., -cfg.ssm_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg, p, xbc):
+    """Depthwise causal conv, width W: (B, S, C) -> (B, S, C)."""
+    w = cfg.ssm_conv_width
+    pads = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xbc.shape[1]] * p["conv_w"][i] for i in range(w))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-triangular cumulative sums:
+    out[i, j] = sum(a[j+1..i]) for j < i; -inf above the diagonal."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x: (b,l,h,p), dt: (b,l,h) fp32 post-softplus, A: (h,)<0,
+    B,C: (b,l,g,n). Returns y: (b,l,h,p) and final state (b,h,p,n)."""
+    b, l, h, pdim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc = l // chunk
+    rep = h // g
+
+    # fold dt into x (the "discretized input")
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)
+    a = (dt * A).astype(jnp.float32)  # (b,l,h)
+
+    def ch(t, lastdims):  # (b, l, ...) -> (b, nc, chunk, ...)
+        return t.reshape((b, nc, chunk) + lastdims)
+
+    xc = ch(xdt, (h, pdim))
+    ac = ch(a, (h,))
+    Bc = ch(B.astype(jnp.float32), (g, n))
+    Cc = ch(C.astype(jnp.float32), (g, n))
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,chunk,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=2)  # (b,nc,chunk,h)
+
+    # 1) intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (b,nc,h,chunk,chunk)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Ch, Bh) * Lmat
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", scores, xc)
+
+    # 2) per-chunk outgoing state: sum_j decay(end-j) * B_j x_j^T
+    decay_out = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,chunk,h)
+    states = jnp.einsum("bzlh,bzlhn,bzlhp->bzhpn", decay_out, Bh, xc)
+
+    # 3) inter-chunk recurrence: S_z = S_{z-1} * exp(sum a_z) + states_z
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,nc,h)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dec, st = lax.associative_scan(
+        combine, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    st = st.transpose(1, 0, 2, 3, 4)  # inclusive: state at END of each chunk
+    final_state = st[:, -1]
+    # state entering each chunk = inclusive scan shifted right by one
+    st_in = jnp.concatenate([jnp.zeros_like(st[:, :1]), st[:, :-1]], axis=1)
+
+    # 4) inter-chunk contribution: C_i * decay(i) * S_in
+    decay_in = jnp.exp(a_cum)  # (b,nc,chunk,h)
+    y_off = jnp.einsum("bzlhn,bzlh,bzhpn->bzlhp", Ch, decay_in, st_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, pdim)
+    return y, final_state
+
+
+def ssm_forward(cfg, p, x, *, policy: ShardingPolicy = NO_POLICY,
+                return_cache: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    din = cfg.ssm_d_inner
+    proj = dense(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(cfg, p, xbc)
+    xin = xbc[..., :din].reshape(b, s, h, pdim)
+    Bmat = xbc[..., din:din + g * n].reshape(b, s, g, n)
+    Cmat = xbc[..., din + g * n:].reshape(b, s, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xin = policy.act(xin, "ssm_bshp")
+    chunk = min(cfg.ssm_chunk, s)
+    y, final_state = ssd_chunked(xin, dtv, A, Bmat, Cmat, chunk)
+    y = y + xin.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+
+    # gated RMSNorm (mamba2 norm-before-gate)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + cfg.norm_eps)
+    y = (yf.astype(x.dtype)) * p["norm_scale"]
+    out = dense(p["out_proj"], y, policy, "act_bsd")
+    if return_cache:
+        w = cfg.ssm_conv_width
+        conv_tail_src = _split_proj(cfg, proj)[1]  # pre-conv xBC
+        pad = max(w - 1 - s, 0)
+        tail = jnp.pad(conv_tail_src, ((0, 0), (pad, 0), (0, 0)))[:, -(w - 1):]
+        return out, SSMCache(conv=tail, state=final_state)
+    return out
+
+
+def ssm_decode(cfg, p, x, cache: SSMCache, *,
+               policy: ShardingPolicy = NO_POLICY):
+    """One-token recurrent update. x: (B,1,D)."""
+    b = x.shape[0]
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    din = cfg.ssm_d_inner
+    w = cfg.ssm_conv_width
+    proj = dense(p["in_proj"], x)  # (B,1,*)
+    z, xbc_new, dt = _split_proj(cfg, proj)
+
+    # rolling conv buffer: window = [cache.conv, xbc_new]
+    win = jnp.concatenate([cache.conv, xbc_new], axis=1)  # (B, W, C)
+    conv_out = jax.nn.silu((win * p["conv_w"][None]).sum(1) + p["conv_b"])  # (B, C)
+    new_conv = win[:, 1:]
+
+    xin = conv_out[:, :din].reshape(b, h, pdim)
+    Bmat = conv_out[:, din:din + g * n].reshape(b, g, n)
+    Cmat = conv_out[:, din + g * n:].reshape(b, g, n)
+    rep = h // g
+    Bh = jnp.repeat(Bmat, rep, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(Cmat, rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dtv * A)  # (b,h)
+    state = cache.state * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xin.astype(jnp.float32) * dtv[..., None],
+        Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + xin.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, 1, din)
+
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + cfg.norm_eps)
+    y = yf.astype(x.dtype) * p["norm_scale"]
+    out = dense(p["out_proj"], y, policy, "act_bsd")
+    return out, SSMCache(conv=new_conv, state=state)

@@ -1,0 +1,170 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Terms (TPU v5e constants):
+  compute    = FLOPs / (chips x 197e12)         [bf16 MXU peak]
+  memory     = bytes / (chips x 819e9)          [HBM]
+  collective = collective bytes / (chips x 50e9) [ICI per link]
+
+``cost_analysis`` of the SPMD-partitioned module reports *per-device*
+FLOPs/bytes, so terms divide by per-chip peaks directly. Collective bytes
+are not in cost_analysis: we parse the post-partitioning HLO text and sum
+the output-shape bytes of every collective op (per-device traffic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+LINK_BW = 50e9       # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) from HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        # normalize fusion'd names like all-reduce-start
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base] += _shape_bytes(shape_part)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device
+    bytes_accessed: float        # per-device
+    coll_bytes: float            # per-device, summed over kinds
+    coll_breakdown: Dict[str, int]
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collective_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "chips": self.chips,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # some backends return [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    cb = collective_bytes(compiled.as_text())
+    return Roofline(flops=flops, bytes_accessed=byts,
+                    coll_bytes=float(sum(cb.values())), coll_breakdown=cb,
+                    chips=chips)
+
+
+def extrapolate(r2: Roofline, r4: Roofline, l2: int, l4: int,
+                l_full: int) -> Roofline:
+    """Linear layer-count extrapolation between two capped compiles.
+
+    Exact for per-layer terms because layers within a segment are
+    structurally identical; the intercept captures embed/loss/top-level
+    costs."""
+    if l4 == l2:
+        return r4
+
+    def ext(v2, v4):
+        slope = (v4 - v2) / (l4 - l2)
+        return v2 + slope * (l_full - l2)
+
+    cb = {k: max(0.0, ext(r2.coll_breakdown.get(k, 0),
+                          r4.coll_breakdown.get(k, 0)))
+          for k in set(r2.coll_breakdown) | set(r4.coll_breakdown)}
+    return Roofline(
+        flops=max(0.0, ext(r2.flops, r4.flops)),
+        bytes_accessed=max(0.0, ext(r2.bytes_accessed, r4.bytes_accessed)),
+        coll_bytes=float(sum(cb.values())),
+        coll_breakdown={k: int(v) for k, v in cb.items()},
+        chips=r4.chips,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill/decode), N = *matmul*
+    params (embeddings excluded — lookups are gathers, not FLOPs; the
+    unembed projection is added back explicitly). MoE uses N_active.
+    Enc-dec: encoder params see seq/4 tokens (the dry-run's encoder input),
+    decoder params the full seq."""
+    n = cfg.n_active_params() if cfg.is_moe else cfg.n_params()
+    from repro.models.layers import pad_vocab
+    embed = pad_vocab(cfg.vocab_size) * cfg.d_model
+    n_matmul = n - embed * (1 if cfg.tie_embeddings else 2)
+
+    factor = 6 if shape.kind == "train" else 2
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+
+    if cfg.is_encdec:
+        enc_frac = cfg.encoder_layers / (cfg.encoder_layers + cfg.num_layers)
+        enc_tokens = (shape.global_batch * (shape.seq_len // 4)
+                      if shape.kind != "decode" else 0)
+        f = factor * n_matmul * (
+            (1 - enc_frac) * tokens + enc_frac * enc_tokens) / 1.0
+    else:
+        f = factor * n_matmul * tokens
+    # unembed projection (vocab-parallel matmul is real compute)
+    f += factor * embed * tokens if shape.kind == "train" else \
+        2 * embed * shape.global_batch  # prefill unembeds last position only
+    return f

@@ -1,0 +1,438 @@
+"""Event-driven serving simulator (paper §III.E).
+
+The paper tabulates results from the ORCA/vLLM/InfiniteLLM papers because the
+authors "lacked the computing abilities" to run the systems. We instead
+*simulate* the serving cluster with an explicit iteration cost model, so
+Fig. 9 / Fig. 10-style sweeps run on this CPU container while exercising the
+real scheduler + allocator code paths from ``repro.core``.
+
+Cost model (per engine iteration, A100-ish serving OPT-13B unless overridden):
+  t_iter = t_fixed + c_token * (#tokens through MLP/linear, the selective-
+           batching flattened buffer) + c_ctx * Σ context lens (attention
+           reads) [+ c_remote * Σ remote context (DistKV borrowed rBlocks)]
+
+All schedulers/allocators are the *real* implementations — the simulator only
+replaces the model execution with the cost model and draws output lengths
+from request metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.distkv.gmanager import GManager
+from repro.core.distkv.rmanager import RManager
+from repro.core.paging.allocator import (BlockAllocator,
+                                         ContiguousPreallocAllocator,
+                                         OutOfBlocks)
+from repro.core.scheduling.batch import BatchScheduler
+from repro.core.scheduling.iteration import IterationScheduler
+from repro.core.scheduling.request import Phase, Request
+
+
+@dataclasses.dataclass
+class CostModel:
+    t_fixed: float = 0.004       # kernel-launch/sync floor per iteration
+    c_token: float = 12e-6       # s per flattened token (linear layers)
+    c_ctx: float = 18e-9         # s per cached token read (attention)
+    # borrowed rBlocks: DistAttention computes the micro-attention where the
+    # block lives and ships only (o, m, l) partials, so the penalty is the
+    # merge + coordination, not a remote read of the whole page (~35% extra)
+    c_remote: float = 6e-9
+
+    def iteration_time(self, n_tokens: int, sum_ctx: int,
+                       sum_remote_ctx: int = 0) -> float:
+        return (self.t_fixed + self.c_token * n_tokens +
+                self.c_ctx * sum_ctx + self.c_remote * sum_remote_ctx)
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    makespan: float
+    peak_memory_frac: float = 0.0
+    kv_utilization: float = 1.0
+    preemptions: int = 0
+    rejected: int = 0
+
+    @property
+    def finished(self) -> List[Request]:
+        return [r for r in self.requests if r.finish_time is not None]
+
+    @property
+    def completed_frac(self) -> float:
+        return len(self.finished) / max(len(self.requests), 1)
+
+    @property
+    def normalized_latencies(self) -> np.ndarray:
+        return np.array([r.normalized_latency() for r in self.finished])
+
+    @property
+    def mean_normalized_latency(self) -> float:
+        ls = self.normalized_latencies
+        return float(ls.mean()) if len(ls) else float("inf")
+
+    @property
+    def p99_normalized_latency(self) -> float:
+        ls = self.normalized_latencies
+        return float(np.percentile(ls, 99)) if len(ls) else float("inf")
+
+    @property
+    def throughput_tokens_per_s(self) -> float:
+        """Useful throughput: tokens of *finished* requests only."""
+        tok = sum(r.total_generated for r in self.finished)
+        return tok / self.makespan if self.makespan > 0 else 0.0
+
+
+def make_workload(n: int, *, rate: float, dist: str = "sharegpt",
+                  seed: int = 0, long_frac: float = 0.0,
+                  long_len: int = 16_384,
+                  max_len: int = 2048) -> List[Request]:
+    """Poisson arrivals; prompt/output lengths follow the named distribution.
+
+    ``dist``: "sharegpt" (long, heavy-tailed outputs) | "alpaca" (short).
+    ``long_frac``: fraction of requests with ~``long_len`` total context
+    (the Fig. 10 knob: 1% / 10% long requests)."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    reqs = []
+    for i in range(n):
+        if dist == "sharegpt":
+            p = int(np.clip(rng.lognormal(4.9, 0.9), 4, max_len - 2))
+            o = int(np.clip(rng.lognormal(5.2, 0.9), 1, max_len - p - 1))
+        elif dist == "alpaca":
+            p = int(np.clip(rng.lognormal(3.0, 0.8), 4, max_len - 2))
+            o = int(np.clip(rng.lognormal(3.7, 0.9), 1, max_len - p - 1))
+        else:
+            raise ValueError(dist)
+        if long_frac and rng.random() < long_frac:
+            # long-context requests are prompt-heavy (long document in,
+            # short answer out), as in the InfiniteLLM evaluation
+            total = long_len
+            p = max(4, int(total * rng.uniform(0.90, 0.97)))
+            o = max(1, total - p)
+        reqs.append(Request(i, float(arr[i]), [], max_new_tokens=o,
+                            prompt_len=p))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# paged / iteration-level simulation (vLLM = paged; Orca variants = prealloc)
+# ---------------------------------------------------------------------------
+
+def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
+                   block_size: int = 16, max_running: int = 256,
+                   max_tokens_per_iter: int = 8192,
+                   cost: Optional[CostModel] = None) -> SimResult:
+    cost = cost or CostModel()
+    alloc = BlockAllocator(num_blocks, block_size)
+    sched = IterationScheduler(alloc, max_running=max_running,
+                               max_tokens_per_iter=max_tokens_per_iter)
+    return _run_iteration_sim(requests, sched, alloc, cost)
+
+
+def _run_iteration_sim(requests, sched, alloc, cost) -> SimResult:
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    now = 0.0
+    i_pending = 0
+    peak_mem = 0.0
+    utils = []
+    preempt = 0
+    n_left = len(pending)
+    while n_left > 0:
+        while i_pending < len(pending) and \
+                pending[i_pending].arrival_time <= now:
+            sched.add_request(pending[i_pending])
+            i_pending += 1
+        plan = sched.schedule()
+        if plan.empty:
+            if i_pending < len(pending):
+                now = max(now, pending[i_pending].arrival_time)
+                continue
+            break
+        preempt += len(plan.preempted)
+        sum_ctx = sum(r.context_len for r in plan.decode)
+        now += cost.iteration_time(plan.token_count(), sum_ctx)
+        # simulate generation: each scheduled request emits one token
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+            if r.first_token_time is None:
+                r.first_token_time = now
+        finished = sched.complete_iteration(plan, now)
+        n_left -= len(finished)
+        peak_mem = max(peak_mem, alloc.num_used / alloc.num_blocks)
+        tables = list(sched.tables.values())
+        if tables:
+            utils.append(alloc.utilization(tables))
+    return SimResult(list(requests), makespan=now, peak_memory_frac=peak_mem,
+                     kv_utilization=float(np.mean(utils)) if utils else 1.0,
+                     preemptions=preempt)
+
+
+def simulate_prealloc(requests: Sequence[Request], *, total_slots: int,
+                      max_len: int = 2048, policy: str = "max",
+                      max_running: int = 256,
+                      max_tokens_per_iter: int = 8192,
+                      cost: Optional[CostModel] = None) -> SimResult:
+    """Orca (Max/Pow2/Oracle): iteration-level scheduling with contiguous
+    per-request reservations instead of paging."""
+    cost = cost or CostModel()
+    res = ContiguousPreallocAllocator(total_slots, max_len, policy)
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    waiting: List[Request] = []
+    running: List[Request] = []
+    now, i_pending = 0.0, 0
+    utils = []
+    n_left = len(pending)
+    while n_left > 0:
+        while i_pending < len(pending) and \
+                pending[i_pending].arrival_time <= now:
+            waiting.append(pending[i_pending])
+            i_pending += 1
+        # admit FCFS while reservations fit
+        prefill: List[Request] = []
+        budget = max_tokens_per_iter - len(running)
+        while waiting and len(running) + len(prefill) < max_running:
+            req = waiting[0]
+            total = req.prompt_len + req.max_new_tokens
+            if req.prompt_len > budget or not res.can_admit(total):
+                break
+            waiting.pop(0)
+            res.admit(req.request_id, total)
+            res.store(req.request_id, req.prompt_len)
+            budget -= req.prompt_len
+            prefill.append(req)
+        decode = list(running)
+        if not prefill and not decode:
+            if i_pending < len(pending):
+                now = max(now, pending[i_pending].arrival_time)
+                continue
+            break
+        n_tok = sum(r.prompt_len for r in prefill) + len(decode)
+        sum_ctx = sum(r.context_len for r in decode)
+        now += cost.iteration_time(n_tok, sum_ctx)
+        for r in prefill + decode:
+            r.output.append(0)
+            res.store(r.request_id, 1)
+            if r.first_token_time is None:
+                r.first_token_time = now
+        running.extend(prefill)
+        for r in list(running):
+            if r.done:
+                r.phase = Phase.FINISHED
+                r.finish_time = now
+                res.release(r.request_id)
+                running.remove(r)
+                n_left -= 1
+        utils.append(res.utilization())
+    return SimResult(list(requests), makespan=now,
+                     kv_utilization=float(np.mean(utils)) if utils else 1.0)
+
+
+def simulate_batch_level(requests: Sequence[Request], *, max_batch: int = 32,
+                         cost: Optional[CostModel] = None) -> SimResult:
+    """Pre-ORCA batch-level scheduling: the whole batch runs until its
+    longest member finishes (early-finish waste + queueing delay)."""
+    cost = cost or CostModel()
+    sched = BatchScheduler(max_batch=max_batch)
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    now, i_pending = 0.0, 0
+    n_left = len(pending)
+    while n_left > 0:
+        while i_pending < len(pending) and \
+                pending[i_pending].arrival_time <= now:
+            sched.add_request(pending[i_pending])
+            i_pending += 1
+        plan = sched.schedule()
+        if plan.empty:
+            if i_pending < len(pending):
+                now = max(now, pending[i_pending].arrival_time)
+                continue
+            break
+        batch = plan.batch
+        n_iters = max(r.max_new_tokens for r in batch)
+        # prefill iteration
+        now += cost.iteration_time(sum(r.prompt_len for r in batch), 0)
+        for it in range(n_iters):
+            live_ctx = sum(min(r.context_len + 1, r.prompt_len +
+                               r.max_new_tokens) for r in batch)
+            now += cost.iteration_time(len(batch), live_ctx)
+            for r in batch:
+                if r.n_generated < r.max_new_tokens:
+                    r.output.append(0)
+                    if r.first_token_time is None:
+                        r.first_token_time = now
+        n_left -= len(sched.complete_batch(now))
+    return SimResult(list(requests), makespan=now)
+
+
+# ---------------------------------------------------------------------------
+# DistKV-LLM multi-instance simulation (Fig. 10)
+# ---------------------------------------------------------------------------
+
+class _LocalKV:
+    """Instance-local paged KV backend (vanilla vLLM instance)."""
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self.counts: Dict[int, int] = {}  # req -> tokens stored
+        self.blocks: Dict[int, List[int]] = {}
+
+    def grow(self, rid: int, n: int) -> bool:
+        cur = self.counts.get(rid, 0)
+        bs = self.alloc.block_size
+        need = -(-(cur + n) // bs) - len(self.blocks.get(rid, []))
+        if need > self.alloc.num_free:
+            return False
+        owned = self.blocks.setdefault(rid, [])
+        for _ in range(need):
+            owned.append(self.alloc.alloc_block())
+        self.counts[rid] = cur + n
+        return True
+
+    def free(self, rid: int) -> None:
+        self.counts.pop(rid, None)
+        for b in self.blocks.pop(rid, []):
+            self.alloc.decref(b)
+
+    def remote_fraction(self, rid: int) -> float:
+        return 0.0
+
+
+class _DistKV:
+    """DistKV-LLM backend: local first, then borrow via gManager."""
+
+    def __init__(self, rm: RManager):
+        self.rm = rm
+
+    def grow(self, rid: int, n: int) -> bool:
+        try:
+            self.rm.append_tokens(rid, n)
+            return True
+        except OutOfBlocks:
+            return False
+
+    def free(self, rid: int) -> None:
+        self.rm.free_seq(rid)
+
+    def remote_fraction(self, rid: int) -> float:
+        return self.rm.remote_fraction(rid)
+
+
+def simulate_distkv(requests: Sequence[Request], *, n_instances: int = 4,
+                    blocks_per_instance: int = 1800, block_size: int = 16,
+                    max_running: int = 64, max_tokens_per_iter: int = 8192,
+                    borrow: bool = True,
+                    cost: Optional[CostModel] = None) -> SimResult:
+    """Round-robin requests over instances. With ``borrow`` (DistKV-LLM) an
+    exhausted instance borrows rBlocks via the gManager debt ledger; remote
+    context incurs ``c_remote``. Without it (vanilla paged instances) a
+    request that cannot grow is preempted (recompute) — the paper's baseline.
+    Instances run in lockstep epochs of the slowest instance's iteration."""
+    cost = cost or CostModel()
+    g = GManager(n_instances)
+    backends: Dict[int, object] = {}
+    if borrow:
+        rms = {i: RManager(i, BlockAllocator(blocks_per_instance, block_size),
+                           g) for i in range(n_instances)}
+        for r in rms.values():
+            r.register_peers(rms)
+        backends = {i: _DistKV(rms[i]) for i in range(n_instances)}
+    else:
+        backends = {i: _LocalKV(BlockAllocator(blocks_per_instance,
+                                               block_size))
+                    for i in range(n_instances)}
+
+    waiting: Dict[int, List[Request]] = {i: [] for i in range(n_instances)}
+    running: Dict[int, List[Request]] = {i: [] for i in range(n_instances)}
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    preemptions = 0
+    rejected = 0
+    # capacity guard: a request whose *total* context can never fit is
+    # rejected up front (local capacity without borrowing; cluster capacity
+    # with) — the baseline's fundamental long-context limitation.
+    cap_tokens = blocks_per_instance * block_size
+    if borrow:
+        cap_tokens *= n_instances
+
+    now, i_pending, n_left = 0.0, 0, len(pending)
+    while n_left > 0:
+        while i_pending < len(pending) and \
+                pending[i_pending].arrival_time <= now:
+            r = pending[i_pending]
+            if r.prompt_len + r.max_new_tokens > cap_tokens * 0.9:
+                rejected += 1
+                n_left -= 1
+            else:
+                waiting[i_pending % n_instances].append(r)
+            i_pending += 1
+        t_instances = [0.0]
+        for inst in range(n_instances):
+            kv = backends[inst]
+            budget = max_tokens_per_iter
+            decode: List[Request] = []
+            prefill: List[Request] = []
+            # decode growth (borrow or preempt)
+            for req in list(running[inst]):
+                if budget <= 0:
+                    break
+                if kv.grow(req.request_id, 1):
+                    decode.append(req)
+                    budget -= 1
+                else:
+                    kv.free(req.request_id)
+                    req.committed_output.extend(req.output)
+                    req.prompt_len = req.context_len
+                    req.max_new_tokens -= req.n_generated
+                    req.output = []
+                    req.preemptions += 1
+                    preemptions += 1
+                    running[inst].remove(req)
+                    waiting[inst].insert(0, req)
+            # admission (a prompt larger than the whole token budget may run
+            # alone when the instance is otherwise idle — chunked-prefill
+            # stand-in, else huge prompts head-of-line-block forever)
+            while waiting[inst] and len(running[inst]) + len(prefill) \
+                    < max_running:
+                req = waiting[inst][0]
+                solo_ok = (not decode and not prefill)
+                if (req.prompt_len > budget and not solo_ok) or \
+                        not kv.grow(req.request_id, req.prompt_len):
+                    break
+                waiting[inst].pop(0)
+                prefill.append(req)
+                budget -= req.prompt_len
+            if not decode and not prefill:
+                continue
+            sum_ctx = sum(r.context_len for r in decode)
+            remote_ctx = sum(int(r.context_len *
+                                 kv.remote_fraction(r.request_id))
+                             for r in decode)
+            n_tok = sum(r.prompt_len for r in prefill) + len(decode)
+            t = cost.iteration_time(n_tok, sum_ctx, remote_ctx)
+            t_instances.append(t)
+            running[inst].extend(prefill)
+            for r in prefill + decode:
+                r.output.append(0)
+                if r.first_token_time is None:
+                    r.first_token_time = now + t
+            for r in list(running[inst]):
+                if r.done:
+                    r.phase = Phase.FINISHED
+                    r.finish_time = now + t
+                    kv.free(r.request_id)
+                    running[inst].remove(r)
+                    n_left -= 1
+        step = max(t_instances)
+        if step == 0.0:
+            if i_pending < len(pending):
+                now = max(now, pending[i_pending].arrival_time)
+                continue
+            break
+        now += step
+    return SimResult(list(requests), makespan=now, preemptions=preemptions,
+                     rejected=rejected)

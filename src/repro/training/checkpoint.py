@@ -1,0 +1,62 @@
+"""Msgpack pytree checkpointing (orbax is unavailable offline).
+
+Layout: ``<dir>/step_<n>/ckpt.msgpack`` with a tiny manifest. Arrays are
+stored as (dtype, shape, raw bytes); bfloat16 round-trips via uint16 views.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    x = np.asarray(jax.device_get(x))
+    if x.dtype == jnp.bfloat16:
+        return {"dt": "bfloat16", "shape": list(x.shape),
+                "data": x.view(np.uint16).tobytes()}
+    return {"dt": x.dtype.str, "shape": list(x.shape), "data": x.tobytes()}
+
+
+def _unpack_leaf(d):
+    if d["dt"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["data"], np.dtype(d["dt"]))
+                       .reshape(d["shape"]))
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    d = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = msgpack.packb({"leaves": [_pack_leaf(l) for l in leaves]},
+                            use_bin_type=True)
+    with open(os.path.join(d, "ckpt.msgpack"), "wb") as f:
+        f.write(payload)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves)}, f)
+    return d
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(path)
+             if n.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any) -> Any:
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "ckpt.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_unpack_leaf(l) for l in payload["leaves"]]
+    _, treedef = jax.tree.flatten(like)
+    return treedef.unflatten(leaves)

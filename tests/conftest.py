@@ -1,0 +1,6 @@
+import os
+
+# Tests see the real single CPU device; only launch/dryrun.py (run as its own
+# process) forces 512 host devices. A couple of distributed tests spawn their
+# own subprocess with a small device count.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

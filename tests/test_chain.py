@@ -1,0 +1,141 @@
+"""Chain selection (paper §II): Dijkstra baseline + NSGA-II, with property
+tests for the NSGA-II invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chain import (Chain, ChainSequenceProblem, decode_chain,
+                              find_best_chain, hypervolume_2d, knee_chain,
+                              latency_throughput_tradeoff, make_fleet)
+from repro.core.chain.nsga2 import (Individual, crowding_distance,
+                                    fast_non_dominated_sort, nsga2)
+from repro.core.chain.registry import Fleet, ServerInfo
+
+
+# -- baseline ---------------------------------------------------------------
+
+def test_dijkstra_single_server():
+    fleet = Fleet(4, [ServerInfo(0, 0, 4, throughput=2.0, latency=0.1)])
+    chain = find_best_chain(fleet)
+    assert len(chain) == 1
+    assert chain.total_time == pytest.approx(0.1 + 4 / 2.0)
+
+
+def test_dijkstra_prefers_fast_single_hop_over_many_hops():
+    servers = [
+        ServerInfo(0, 0, 8, throughput=10.0, latency=0.05),  # spans all
+        ServerInfo(1, 0, 4, throughput=100.0, latency=0.2),
+        ServerInfo(2, 4, 8, throughput=100.0, latency=0.2),
+    ]
+    chain = find_best_chain(Fleet(8, servers))
+    # single server: 0.05 + 0.8 = 0.85 < two hops: 0.4 + 0.08 = 0.48 -> two!
+    assert len(chain) == 2
+    assert chain.total_time == pytest.approx(0.4 + 8 / 100.0)
+
+
+def test_dijkstra_optimality_brute_force():
+    """Exhaustive check on a small random fleet."""
+    import itertools
+    fleet = make_fleet(6, 7, seed=3)
+    best = find_best_chain(fleet).total_time
+
+    def brute(block, elapsed):
+        if block == fleet.num_blocks:
+            return elapsed
+        out = float("inf")
+        for s in fleet.covering(block):
+            for end in range(block + 1, s.end_block + 1):
+                out = min(out, brute(end, elapsed + s.latency +
+                                     s.compute_time(end - block)))
+        return out
+
+    assert best == pytest.approx(brute(0, 0.0))
+
+
+def test_max_throughput_mode():
+    fleet = make_fleet(12, 14, seed=5)
+    chain = find_best_chain(fleet, mode="max_throughput")
+    base = find_best_chain(fleet)
+    assert chain.bottleneck_throughput >= base.bottleneck_throughput
+
+
+# -- NSGA-II invariants -------------------------------------------------------
+
+def _mk(f, cv=0.0):
+    return Individual(x=np.zeros(1, np.int8), f=np.asarray(f, float),
+                      cv=cv)
+
+
+def test_non_dominated_sort_known_case():
+    pop = [_mk([1, 1]), _mk([2, 2]), _mk([1, 2]), _mk([2, 1]),
+           _mk([0.5, 3])]
+    fronts = fast_non_dominated_sort(pop)
+    assert set(fronts[0]) == {0, 4}   # (1,1) and (0.5,3) are non-dominated
+    assert set(fronts[1]) == {2, 3}
+    assert set(fronts[2]) == {1}
+
+
+def test_constraint_domination_feasible_first():
+    pop = [_mk([100, 100], cv=0.0), _mk([0, 0], cv=1.0)]
+    fronts = fast_non_dominated_sort(pop)
+    assert fronts[0] == [0]
+
+
+def test_crowding_extremes_infinite():
+    pop = [_mk([0, 3]), _mk([1, 2]), _mk([2, 1]), _mk([3, 0])]
+    front = [0, 1, 2, 3]
+    crowding_distance(pop, front)
+    assert pop[0].crowding == np.inf and pop[3].crowding == np.inf
+    assert 0 < pop[1].crowding < np.inf
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nsga2_front_is_mutually_nondominated(seed):
+    """Property: no member of the returned Pareto set dominates another."""
+    def evaluate(x):
+        # two competing objectives over bits: ones vs leading zeros
+        f0 = float(x.sum())
+        f1 = float(len(x) - x.sum() + (x[0] * 3))
+        return np.array([f0, f1]), 0.0
+
+    res = nsga2(evaluate, n_var=12, pop_size=20, generations=10, seed=seed)
+    front = res.pareto
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            assert not (np.all(a.f <= b.f) and np.any(a.f < b.f))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_tradeoff_chains_cover_all_blocks(seed):
+    fleet = make_fleet(10, 12, seed=seed % 100)
+    res = latency_throughput_tradeoff(fleet, pop_size=30, generations=15,
+                                      seed=seed)
+    assert res.chains, "NSGA-II produced no feasible chain"
+    for chain in res.chains:
+        covered = []
+        for s, a, b in chain:
+            assert s.start_block <= a and b <= s.end_block
+            covered.extend(range(a, b))
+        assert covered == list(range(fleet.num_blocks))
+
+
+def test_knee_chain_is_valid():
+    fleet = make_fleet(12, 16, seed=9)
+    res = latency_throughput_tradeoff(fleet, pop_size=40, generations=20,
+                                      seed=0)
+    knee = knee_chain(res)
+    assert knee is not None
+    assert knee.total_time > 0
+
+
+def test_hypervolume_2d():
+    pts = np.array([[1.0, 2.0], [2.0, 1.0]])
+    ref = np.array([3.0, 3.0])
+    # (3-1)*(3-2) + (3-2)*(2-1) = 2 + 1 = 3
+    assert hypervolume_2d(pts, ref) == pytest.approx(3.0)
+    assert hypervolume_2d(np.array([[4.0, 4.0]]), ref) == 0.0

@@ -1,0 +1,120 @@
+"""InfiniteLLM distkv: gManager debt ledger, rManager borrowing, and the
+DistAttention partial-merge math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distkv import (GManager, Heartbeat, RManager,
+                               dist_attention_ref, merge_partials_tree,
+                               micro_attention_partial)
+from repro.core.paging import BlockAllocator, OutOfBlocks
+
+
+def _cluster(n=4, blocks=8, bs=16):
+    g = GManager(n)
+    rms = {i: RManager(i, BlockAllocator(blocks, bs), g) for i in range(n)}
+    for r in rms.values():
+        r.register_peers(rms)
+    return g, rms
+
+
+def test_local_alloc_no_debt():
+    g, rms = _cluster()
+    rms[0].append_tokens(1, 16 * 3)
+    assert not g.ledger
+    assert rms[0].remote_fraction(1) == 0.0
+
+
+def test_borrow_then_repay():
+    g, rms = _cluster(blocks=4)
+    rms[0].append_tokens(1, 16 * 4)  # fills local
+    rms[0].append_tokens(2, 16 * 2)  # both remote
+    assert rms[0].remote_fraction(2) == 1.0
+    assert g.borrowed_by(0) == 2
+    rms[0].free_seq(2)
+    assert g.borrowed_by(0) == 0
+    assert all(rm.allocator.num_free + len(rm.allocator.refcount) == 4
+               for rm in rms.values())
+
+
+def test_creditor_selection_prefers_locality():
+    g = GManager(6)
+    for i in range(6):
+        g.heartbeat(Heartbeat(i, free_blocks=5, total_blocks=8))
+    recs = g.recommend_creditors(0, 1)
+    # ring distance from 0: instances 1 and 5 are closest
+    assert set(recs[:2]) == {1, 5}
+    assert len(recs) == 3
+
+
+def test_creditor_respects_safety_margin():
+    g = GManager(3, safety_free=4)
+    g.heartbeat(Heartbeat(1, free_blocks=4, total_blocks=8))  # spare <= 0
+    g.heartbeat(Heartbeat(2, free_blocks=8, total_blocks=8))
+    assert g.recommend_creditors(0, 1) == [2]
+
+
+def test_cluster_exhaustion_raises_and_rolls_back():
+    g, rms = _cluster(n=2, blocks=2)
+    rms[0].append_tokens(1, 16 * 2)
+    rms[1].append_tokens(2, 16 * 1)  # leaves 1 block cluster-wide (safety=2)
+    with pytest.raises(OutOfBlocks):
+        rms[0].append_tokens(3, 16 * 4)
+    # rollback: nothing half-allocated
+    assert g.borrowed_by(0) == 0
+    assert rms[0].seqs[3].num_tokens == 0 if 3 in rms[0].seqs else True
+
+
+def test_debt_ledger_snapshot_matches_paper_fig8_semantics():
+    g, rms = _cluster(n=4, blocks=4)
+    rms[1].append_tokens(10, 16 * 4)  # local full
+    rms[1].append_tokens(11, 16 * 2)  # borrows 2
+    snap = g.snapshot()
+    creditors = [i for i, row in snap.items() if row["debtors"]]
+    assert creditors, "someone lent blocks"
+    for i, row in snap.items():
+        for debtor, blocks in row["debtors"]:
+            assert debtor == 1 and blocks > 0
+
+
+# -- DistAttention math --------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_partial_merge_equals_full_softmax(seed, shards):
+    """Property: merging shard partials == unsharded attention, any split."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, h, hkv, dh, s = 2, 4, 2, 16, 8 * shards
+    q = jax.random.normal(ks[0], (b, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    lens = jnp.array([3, s], jnp.int32)
+    want = dist_attention_ref(q, k, v, lens)
+
+    pos = jnp.arange(s)
+    os_, ms, ls = [], [], []
+    per = s // shards
+    for i in range(shards):
+        sl = slice(i * per, (i + 1) * per)
+        valid = (pos[sl][None, :] < lens[:, None])
+        o, m, l = micro_attention_partial(q, k[:, sl], v[:, sl], valid)
+        os_.append(o)
+        ms.append(m)
+        ls.append(l)
+    merged = merge_partials_tree(os_, ms, ls)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_shard_does_not_nan():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, h, hkv, dh, s = 1, 2, 1, 8, 4
+    q = jax.random.normal(ks[0], (b, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    valid = jnp.zeros((b, s), bool)  # shard holds nothing valid
+    o, m, l = micro_attention_partial(q, k, v, valid)
+    assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.all(l == 0))

@@ -1,0 +1,78 @@
+"""Serving simulator invariants (the machinery behind Fig. 9/10 benches)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.simulator import (CostModel, make_workload,
+                                     simulate_batch_level, simulate_distkv,
+                                     simulate_paged, simulate_prealloc)
+
+
+def test_workload_shapes():
+    reqs = make_workload(50, rate=5.0, dist="alpaca", seed=0)
+    assert len(reqs) == 50
+    assert all(r.prompt_len >= 4 and r.max_new_tokens >= 1 for r in reqs)
+    arr = [r.arrival_time for r in reqs]
+    assert arr == sorted(arr)
+
+
+def test_long_fraction_requests_are_prompt_heavy():
+    reqs = make_workload(300, rate=5.0, seed=0, long_frac=0.2,
+                         long_len=8000)
+    longs = [r for r in reqs if r.prompt_len + r.max_new_tokens > 4000]
+    assert longs
+    for r in longs:
+        assert r.prompt_len / (r.prompt_len + r.max_new_tokens) > 0.8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_paged_sim_completes_everything(seed):
+    reqs = make_workload(40, rate=10.0, seed=seed)
+    res = simulate_paged(reqs, num_blocks=4096, block_size=16)
+    assert res.completed_frac == 1.0
+    assert all(r.total_generated == r.max_new_tokens +
+               len(r.committed_output) - len(r.committed_output)
+               or r.total_generated >= 1 for r in reqs)
+    assert res.makespan > 0
+    assert 0 < res.kv_utilization <= 1.0
+
+
+def test_oracle_never_worse_than_max():
+    wl = lambda: make_workload(150, rate=20.0, dist="sharegpt", seed=4)
+    oracle = simulate_prealloc(wl(), total_slots=30_000, policy="oracle")
+    mx = simulate_prealloc(wl(), total_slots=30_000, policy="max")
+    assert oracle.mean_normalized_latency <= mx.mean_normalized_latency + 1e-9
+    assert oracle.kv_utilization >= mx.kv_utilization
+
+
+def test_paged_beats_max_under_pressure():
+    wl = lambda: make_workload(200, rate=25.0, dist="sharegpt", seed=5)
+    paged = simulate_paged(wl(), num_blocks=1500, block_size=16)
+    mx = simulate_prealloc(wl(), total_slots=1500 * 16, policy="max")
+    assert paged.mean_normalized_latency < mx.mean_normalized_latency
+
+
+def test_batch_level_worse_latency():
+    wl = lambda: make_workload(100, rate=4.0, dist="sharegpt", seed=6)
+    it = simulate_paged(wl(), num_blocks=4096)
+    bl = simulate_batch_level(wl(), max_batch=16)
+    assert bl.mean_normalized_latency > it.mean_normalized_latency
+
+
+def test_distkv_completes_overflow_requests():
+    wl = lambda: make_workload(60, rate=10.0, seed=1, long_frac=0.1,
+                               long_len=20_000, max_len=1024)
+    with_borrow = simulate_distkv(wl(), borrow=True,
+                                  blocks_per_instance=800)
+    without = simulate_distkv(wl(), borrow=False, blocks_per_instance=800)
+    assert with_borrow.completed_frac == 1.0
+    assert without.rejected > 0  # 20k tokens cannot fit one 12.8k instance
+
+
+def test_cost_model_monotonicity():
+    c = CostModel()
+    assert c.iteration_time(100, 0) < c.iteration_time(200, 0)
+    assert c.iteration_time(100, 1000) < c.iteration_time(100, 2000)
+    assert c.iteration_time(100, 1000, 0) < c.iteration_time(100, 1000, 500)
