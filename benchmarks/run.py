@@ -15,6 +15,7 @@ def main() -> None:
     import benchmarks.orca_scheduling as orca_scheduling
     import benchmarks.serving_fig9 as serving_fig9
     import benchmarks.serving_fig10 as serving_fig10
+    import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
 
     csv_rows = []
@@ -46,6 +47,11 @@ def main() -> None:
     bench("serving_fig10_distkv",
           lambda: serving_fig10.run(n_requests=200),
           lambda out: "max_gain=%.2fx" % max(r["gain"] for r in out))
+
+    bench("prefix_cache_sweep (radix KV reuse)",
+          lambda: prefix_cache_sweep.run(n_requests=150),
+          lambda out: "shared_speedup=%.3fx,hit=%.0f%%" % (
+              out[0]["speedup"], 100 * out[0]["hit_rate"]))
 
     bench("orca_iteration_vs_batch",
           orca_scheduling.run,

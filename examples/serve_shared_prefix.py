@@ -1,0 +1,73 @@
+"""Radix prefix-cache serving: N chat sessions over one shared system prompt.
+
+Runs the same traffic through two `PagedEngine` instances — cold (no cache)
+and with the radix-tree prefix cache — and prints per-request prefill work,
+the cache hit-rate, and KV page usage. With the cache, every request after
+the first computes only its own suffix tokens; the shared system-prompt pages
+are prefilled once and increfed into each request's block table.
+
+  PYTHONPATH=src python examples/serve_shared_prefix.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core.scheduling.request import Request
+from repro.models import Model
+from repro.serving.engine import EngineConfig, PagedEngine
+
+N_SESSIONS = 8
+PAGE_SIZE = 8
+SYSTEM_PROMPT_PAGES = 2
+
+
+def drive(eng, prompts, label):
+    print(f"\n--- {label} ---")
+    outputs = []
+    for i, prompt in enumerate(prompts):
+        req = Request(i, 0.0, list(prompt), max_new_tokens=4)
+        eng.add_request(req)
+        eng.run_to_completion()
+        cached = req.num_cached_tokens
+        print(f"session {i}: prompt {req.prompt_len:2d} tok, "
+              f"prefilled {req.prompt_len - cached:2d}, "
+              f"served from cache {cached:2d}")
+        outputs.append(req.full_output)
+    used = eng.allocator.num_used
+    print(f"kv pages in use after drain: {used}/{eng.allocator.num_blocks} "
+          f"(cache-resident pages keep the shared prefix warm)")
+    stats = eng.prefix_cache_stats()
+    if stats:
+        print(f"hit-rate {stats['hit_rate']:.1%} "
+              f"({stats['hit_tokens']:.0f}/{stats['lookup_tokens']:.0f} "
+              f"prompt tokens), {stats['cached_pages']:.0f} cached pages")
+    return outputs
+
+
+def main():
+    cfg = smoke_config("h2o-danube-1.8b")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(42)
+    system = rng.integers(2, cfg.vocab_size,
+                          SYSTEM_PROMPT_PAGES * PAGE_SIZE).tolist()
+    prompts = [system + rng.integers(2, cfg.vocab_size, 6).tolist()
+               for _ in range(N_SESSIONS)]
+
+    def engine(enable):
+        return PagedEngine(cfg, params, EngineConfig(
+            num_pages=64, page_size=PAGE_SIZE, max_slots=4,
+            enable_prefix_cache=enable))
+
+    cold = drive(engine(False), prompts, "cold start (no prefix cache)")
+    warm = drive(engine(True), prompts, "radix prefix cache")
+    match = cold == warm
+    print(f"\noutputs identical across both engines: {match}")
+    assert match, "prefix-cache path must be a pure optimization"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Shims over JAX API renames across the supported version range."""
+
+import jax
+
+try:
+    shard_map = jax.shard_map  # newer JAX exposes it at top level
+except AttributeError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# newer JAX names this pltpu.CompilerParams, older TPUCompilerParams
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams

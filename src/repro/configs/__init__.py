@@ -35,6 +35,9 @@ class ArchConfig:
     # --- attention variants -------------------------------------------------
     attention: str = "gqa"  # gqa | mla | none
     sliding_window: Optional[int] = None  # SWA width (tokens) or None
+    # trained context limit; serving sizes per-sequence block tables from it
+    # (None = unbounded, the engine falls back to its page supply)
+    max_seq_len: Optional[int] = None
     # Hymba-style: every Nth layer uses global attention, others sliding window.
     global_attn_every: Optional[int] = None
     rope_theta: float = 10_000.0

@@ -19,4 +19,5 @@ CONFIG = ArchConfig(
     vocab_size=32000,
     attention="gqa",
     sliding_window=4096,
+    max_seq_len=16384,
 )

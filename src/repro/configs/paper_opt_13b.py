@@ -19,6 +19,7 @@ CONFIG = ArchConfig(
     d_ff=20480,
     vocab_size=50272,
     attention="gqa",
+    max_seq_len=2048,
     use_bias=True,
     gated_mlp=False,
     tie_embeddings=True,

@@ -51,13 +51,25 @@ class BlockAllocator:
         return b
 
     def incref(self, block: int) -> None:
+        if block not in self.refcount:
+            raise ValueError(
+                f"incref of unallocated block {block} (free or never "
+                f"allocated) — references may only be added to live blocks")
         self.refcount[block] += 1
 
     def decref(self, block: int) -> None:
+        if block not in self.refcount:
+            raise ValueError(
+                f"decref of unallocated block {block} — double free or "
+                f"unknown block")
         self.refcount[block] -= 1
         if self.refcount[block] == 0:
             del self.refcount[block]
             self.free_list.append(block)
+
+    def refcount_of(self, block: int) -> int:
+        """Live reference count of ``block`` (0 = free / never allocated)."""
+        return self.refcount.get(block, 0)
 
     # -- sequence-level API ----------------------------------------------------
     def blocks_needed(self, table: BlockTable, new_tokens: int) -> int:

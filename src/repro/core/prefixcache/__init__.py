@@ -1,0 +1,1 @@
+from repro.core.prefixcache.radix import PrefixCache, RadixNode  # noqa: F401

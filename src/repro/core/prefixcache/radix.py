@@ -1,0 +1,223 @@
+"""Radix-tree prefix KV cache: cross-request sharing of physical pages.
+
+DESIGN
+======
+
+Problem. The paging layer (``core.paging.allocator``) shares pages only
+*within* a fork family (parallel sampling COW) and every admitted prompt is
+prefilled from token 0. Production traffic is dominated by shared prefixes —
+system prompts, few-shot templates, multi-turn chat history — so the same
+prefix KV is recomputed and stored once per request.
+
+Solution. A token-keyed radix tree over **physical KV pages**. Each node owns
+exactly one full page: its key is the ``page_size``-token tuple stored in that
+page, its value the physical block id. A root-to-node path therefore spells a
+page-aligned token prefix, and the blocks along the path are precisely the KV
+pages a new request with that prefix can reuse. The tree *holds one allocator
+reference per adopted block* (``incref``), so pages survive the freeing of the
+request that produced them; refcounts make sharing safe with the existing COW
+machinery (a cached page always has refcount >= 1 from the tree, so any
+appender that lands inside it copies first).
+
+Lifecycle per request:
+
+1. **match** — at admission the scheduler walks the tree over the prompt's
+   full pages (capped at ``prompt_len - 1`` tokens so at least one suffix
+   token remains to produce logits). Pure lookup, no side effects.
+2. **lock** — once admission commits, the matched path is pinned
+   (``pin_count``) and each block increfed on behalf of the request; the
+   blocks seed the request's :class:`BlockTable`, so the uniform
+   ``free_table`` path works unchanged at the end of life.
+3. **insert** — as soon as the request's prefill iteration completes, its
+   full *prompt* pages are inserted (their KV now exists, so waiting for
+   request completion would let a same-prefix burst recompute the prefix N
+   times): pages already present are skipped (the request's copy is simply
+   freed at end of life), new pages are adopted by the tree with an extra
+   reference.
+4. **evict** — under ``OutOfBlocks`` pressure the scheduler evicts
+   least-recently-used *unpinned leaves* before resorting to preemption.
+   Only pages the tree exclusively owns (allocator refcount 1) are
+   candidates: a page a running request still references is never freed, and
+   forgetting it would lose cache without reclaiming memory.
+
+Divergence from SGLang. SGLang's radix tree is *token-level*: nodes hold
+variable-length token runs and are split on partial matches, so a hit can end
+mid-page. Here matching is **page-aligned** (one node == one physical page)
+because the paged engine can only reuse whole physical blocks — a partial
+page would need a COW copy plus a partial recompute for no FLOP savings on
+the remainder. The trade is at most ``page_size - 1`` tokens of lost hit per
+request, in exchange for no node splitting and a 1:1 node/block mapping.
+Generated (decode) tokens are not inserted — only prompt pages — so
+multi-turn reuse covers the accumulated history as resent by the client, not
+the model's own reply; caching replies is a recorded ROADMAP follow-up, as is
+cross-instance prefix sharing over distkv.
+
+The LRU clock is a logical counter (no wall time), keeping the simulator
+deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.paging.allocator import BlockAllocator
+
+
+@dataclasses.dataclass
+class RadixNode:
+    """One cached physical page. ``key`` is the page's token content."""
+    key: Tuple[int, ...]
+    block: int
+    parent: Optional["RadixNode"]
+    children: Dict[Tuple[int, ...], "RadixNode"] = \
+        dataclasses.field(default_factory=dict)
+    last_access: int = 0
+    pin_count: int = 0  # running requests currently holding this node
+
+
+class PrefixCache:
+    def __init__(self, allocator: BlockAllocator,
+                 page_size: Optional[int] = None):
+        self.allocator = allocator
+        self.page_size = page_size or allocator.block_size
+        self.root = RadixNode(key=(), block=-1, parent=None)
+        self._clock = 0
+        self.num_pages = 0
+        # admission stats (recorded by the scheduler via record_admission)
+        self.lookup_tokens = 0
+        self.hit_tokens = 0
+        self.admissions = 0
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    # -- lookup -----------------------------------------------------------------
+    def match(self, tokens: Sequence[int], *,
+              max_tokens: Optional[int] = None) -> List[RadixNode]:
+        """Longest page-aligned cached prefix of ``tokens``.
+
+        Returns the matched node path (root excluded; may be empty). Pure
+        lookup apart from LRU touching — callers commit with :meth:`lock`.
+        ``max_tokens`` caps the match (admission passes ``prompt_len - 1`` so
+        a fully-cached prompt still prefills its last token for logits)."""
+        ps = self.page_size
+        limit = len(tokens) if max_tokens is None else \
+            min(max_tokens, len(tokens))
+        node, path = self.root, []
+        self._clock += 1
+        for i in range(limit // ps):
+            child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if child is None:
+                break
+            child.last_access = self._clock
+            path.append(child)
+            node = child
+        return path
+
+    # -- request lifecycle --------------------------------------------------------
+    def lock(self, path: List[RadixNode]) -> List[int]:
+        """Pin ``path`` and take one block reference per node on behalf of an
+        admitted request. Returns the block ids (in prefix order) for seeding
+        the request's block table; ``free_table`` releases the references."""
+        for node in path:
+            node.pin_count += 1
+            self.allocator.incref(node.block)
+        return [node.block for node in path]
+
+    def release(self, path: List[RadixNode]) -> None:
+        """Unpin a path locked at admission (block refs are returned
+        separately by the request's ``free_table``)."""
+        for node in path:
+            node.pin_count -= 1
+
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Insert the full pages of ``tokens`` (page ``i`` backed by
+        ``blocks[i]``). Pages already cached are skipped; new pages are
+        adopted with an extra allocator reference. Returns #pages adopted."""
+        ps = self.page_size
+        node, new = self.root, 0
+        self._clock += 1
+        for i in range(len(tokens) // ps):
+            key = tuple(tokens[i * ps:(i + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                self.allocator.incref(blocks[i])
+                child = RadixNode(key=key, block=blocks[i], parent=node)
+                node.children[key] = child
+                self.num_pages += 1
+                new += 1
+            child.last_access = self._clock
+            node = child
+        self.inserted_pages += new
+        return new
+
+    # -- eviction -----------------------------------------------------------------
+    def evict(self, n_blocks: int) -> int:
+        """Return >= ``n_blocks`` pages to the allocator's free list by
+        dropping LRU unpinned leaves. Only pages the tree *exclusively* owns
+        (refcount 1) are candidates: a page some request still references is
+        never freed, and dropping the tree's reference to it would destroy
+        cache without reclaiming any memory. Returns blocks actually freed."""
+        freed = 0
+        progress = True
+        # one tree walk per pass, not per freed block; extra passes only when
+        # evicting a leaf exposes its parent as a new eviction candidate
+        while freed < n_blocks and progress:
+            progress = False
+            for leaf in self._lru_leaves():
+                if freed >= n_blocks:
+                    break
+                before = self.allocator.num_free
+                self.allocator.decref(leaf.block)
+                freed += self.allocator.num_free - before
+                del leaf.parent.children[leaf.key]
+                self.num_pages -= 1
+                self.evicted_pages += 1
+                progress = True
+        return freed
+
+    def _lru_leaves(self) -> List[RadixNode]:
+        """Unpinned, exclusively-tree-owned leaves, oldest first."""
+        leaves = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for ch in node.children.values():
+                if ch.children:
+                    stack.append(ch)
+                elif ch.pin_count == 0 and \
+                        self.allocator.refcount_of(ch.block) == 1:
+                    leaves.append(ch)
+        leaves.sort(key=lambda ch: ch.last_access)
+        return leaves
+
+    def clear(self) -> int:
+        """Drop every unpinned page (e.g. on engine reset)."""
+        return self.evict(self.num_pages)
+
+    # -- stats --------------------------------------------------------------------
+    def record_admission(self, prompt_tokens: int, hit_tokens: int) -> None:
+        self.admissions += 1
+        self.lookup_tokens += prompt_tokens
+        self.hit_tokens += hit_tokens
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from cached pages."""
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens \
+            else 0.0
+
+    @property
+    def cached_tokens(self) -> int:
+        return self.num_pages * self.page_size
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "hit_rate": self.hit_rate,
+            "hit_tokens": self.hit_tokens,
+            "lookup_tokens": self.lookup_tokens,
+            "admissions": self.admissions,
+            "cached_pages": self.num_pages,
+            "inserted_pages": self.inserted_pages,
+            "evicted_pages": self.evicted_pages,
+        }

@@ -14,6 +14,13 @@ iteration rather than the sequence count.
 Memory is delegated to a :class:`BlockAllocator` (vLLM §III.C) or any object
 with the same interface; preemption-by-recompute evicts the youngest request
 when pages run out (vLLM's recompute policy).
+
+With a :class:`~repro.core.prefixcache.PrefixCache` attached, admission first
+matches the prompt against the radix tree: matched pages are locked into the
+request's block table (refcounted, no recompute) and only the *uncached
+suffix* is charged against the token budget; prompt pages are inserted into
+the tree as soon as prefill completes (and survive the request), and under
+page pressure LRU cache eviction runs before any preemption.
 """
 
 from __future__ import annotations
@@ -22,6 +29,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.paging.allocator import BlockAllocator, BlockTable
+from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.request import Phase, Request
 
 
@@ -36,21 +44,27 @@ class IterationPlan:
         return not (self.prefill or self.decode)
 
     def token_count(self) -> int:
-        return sum(r.prompt_len for r in self.prefill) + len(self.decode)
+        """Tokens through the flattened MLP buffer this iteration (cached
+        prefix pages are read, not recomputed — they cost no prefill FLOPs)."""
+        return sum(r.prompt_len - r.num_cached_tokens
+                   for r in self.prefill) + len(self.decode)
 
 
 class IterationScheduler:
     def __init__(self, allocator: BlockAllocator, *,
                  max_running: int = 64,
                  max_tokens_per_iter: int = 8192,
-                 watermark: float = 0.01):
+                 watermark: float = 0.01,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.allocator = allocator
         self.max_running = max_running
         self.max_tokens = max_tokens_per_iter
         self.watermark_blocks = max(1, int(allocator.num_blocks * watermark))
+        self.prefix_cache = prefix_cache
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
+        self._cache_paths: Dict[int, list] = {}  # request id -> locked nodes
 
     # -- client API -------------------------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -61,9 +75,17 @@ class IterationScheduler:
         req.phase = Phase.FINISHED
         req.finish_time = now
         if req.request_id in self.tables:
+            # prompt pages were already adopted by the radix tree at prefill
+            # completion; the tree's increfs keep them alive past free_table
+            self._release_cache_path(req)
             self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:
             self.running.remove(req)
+
+    def _release_cache_path(self, req: Request) -> None:
+        path = self._cache_paths.pop(req.request_id, None)
+        if path:
+            self.prefix_cache.release(path)
 
     # -- one iteration ------------------------------------------------------------
     def schedule(self) -> IterationPlan:
@@ -79,8 +101,24 @@ class IterationScheduler:
             if req.request_id not in self.tables:
                 continue  # became a preemption victim earlier this iteration
             table = self.tables[req.request_id]
+            if not self.allocator.can_append(table, 1) and \
+                    self.prefix_cache is not None:
+                # reclaim unreferenced cached pages before preempting anyone
+                self.prefix_cache.evict(self.allocator.blocks_needed(table, 1))
             if not self.allocator.can_append(table, 1):
                 victim = self._preempt_youngest(exclude=req)
+                if victim is not None and victim in decode:
+                    # victim was granted its decode token earlier this
+                    # iteration; rescind it (its pages are gone)
+                    decode.remove(victim)
+                    budget += 1
+                if victim is not None and self.prefix_cache is not None \
+                        and not self.allocator.can_append(table, 1):
+                    # the victim's prompt pages may survive only as
+                    # tree-held (refcount-1) cache pages — reclaim them
+                    # before giving up on this request too
+                    self.prefix_cache.evict(
+                        self.allocator.blocks_needed(table, 1))
                 if victim is None or not self.allocator.can_append(table, 1):
                     # preempt this request itself
                     self._preempt(req)
@@ -95,16 +133,42 @@ class IterationScheduler:
         while (self.waiting and budget > 0
                and len(self.running) < self.max_running):
             req = self.waiting[0]
-            need_tokens = req.prompt_len
+            path: list = []
+            cached = 0
+            if self.prefix_cache is not None and \
+                    len(req.prompt) == req.prompt_len:
+                # cap at prompt_len-1: the last prompt token must be computed
+                # for the first-token logits even if fully cached
+                path = self.prefix_cache.match(req.prompt,
+                                               max_tokens=req.prompt_len - 1)
+                cached = len(path) * self.allocator.block_size
+            need_tokens = req.prompt_len - cached
             if need_tokens > budget:
                 break
+            # lock before checking supply so eviction cannot claim the
+            # matched pages out from under us
             table = BlockTable()
+            if path:
+                table.blocks = self.prefix_cache.lock(path)
+                table.num_tokens = cached
+            short = (self.allocator.blocks_needed(table, need_tokens)
+                     - (self.allocator.num_free - self.watermark_blocks))
+            if short > 0 and self.prefix_cache is not None:
+                self.prefix_cache.evict(short)
             if (self.allocator.blocks_needed(table, need_tokens)
                     > self.allocator.num_free - self.watermark_blocks):
+                if path:  # roll back the lock
+                    self.prefix_cache.release(path)
+                    self.allocator.free_table(table)
                 break
             self.waiting.pop(0)
             self.allocator.append_tokens(table, need_tokens)
             self.tables[req.request_id] = table
+            if path:
+                self._cache_paths[req.request_id] = path
+            req.num_cached_tokens = cached
+            if self.prefix_cache is not None:
+                self.prefix_cache.record_admission(req.prompt_len, cached)
             req.phase = Phase.INITIATION
             self.running.append(req)
             prefill.append(req)
@@ -120,6 +184,15 @@ class IterationScheduler:
             req.phase = Phase.INCREMENT
             if req.first_token_time is None:
                 req.first_token_time = now
+            # adopt the prompt's full pages into the radix tree as soon as
+            # their KV exists — waiting for request completion would make
+            # every member of a same-prefix burst recompute the shared
+            # prefix (thundering herd)
+            if self.prefix_cache is not None and \
+                    len(req.prompt) == req.prompt_len and \
+                    req.request_id in self.tables:
+                self.prefix_cache.insert(
+                    req.prompt, self.tables[req.request_id].blocks)
         for req in plan.prefill + plan.decode:
             if req.done:
                 self.finish(req, now)
@@ -136,6 +209,8 @@ class IterationScheduler:
         req.max_new_tokens -= req.n_generated
         req.committed_output.extend(req.output)
         req.output = []
+        req.num_cached_tokens = 0  # re-matched at the next admission
+        self._release_cache_path(req)
         self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:
             self.running.remove(req)

@@ -33,6 +33,9 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     preemptions: int = 0
+    # prompt tokens served from the radix prefix cache at the current
+    # admission (page-aligned; the engine prefills only the remainder)
+    num_cached_tokens: int = 0
 
     def __post_init__(self):
         if self.prompt_len is None:

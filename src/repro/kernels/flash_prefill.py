@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -115,7 +117,7 @@ def flash_prefill(
             pltpu.VMEM((g, q_block, dh), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, s, dh), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

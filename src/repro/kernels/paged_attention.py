@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -156,7 +158,7 @@ def paged_attention(
             jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
             jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables, context_lens, qg, k_pages, v_pages)

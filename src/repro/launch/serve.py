@@ -32,6 +32,8 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas paged-attention (interpret mode on CPU)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix KV cache (cross-request reuse)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
@@ -40,7 +42,7 @@ def main():
     eng = PagedEngine(cfg, params, EngineConfig(
         num_pages=args.pages, page_size=args.page_size,
         max_slots=args.slots, temperature=args.temperature,
-        use_kernel=args.use_kernel))
+        use_kernel=args.use_kernel, enable_prefix_cache=args.prefix_cache))
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
@@ -71,6 +73,10 @@ def main():
     print(f"served {len(reqs)} requests, {tok} tokens in {dt:.1f}s "
           f"({tok/dt:.1f} tok/s, {eng.iterations} iterations), "
           f"kv-util {eng.kv_utilization():.2f}")
+    stats = eng.prefix_cache_stats()
+    if stats:
+        print(f"prefix-cache hit-rate {stats['hit_rate']:.1%}, "
+              f"{stats['cached_pages']:.0f} pages resident")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ Execution model per iteration (continuous batching):
 1. the :class:`IterationScheduler` plans prefills + decodes under the token
    budget and page supply;
 2. admitted prompts are prefilled (flash path), their K/V scattered into the
-   **paged physical cache** through the request's block table;
+   **paged physical cache** through the request's block table; with
+   ``enable_prefix_cache`` a radix-tree hit skips the cached prefix entirely
+   and prefills only the suffix at its absolute RoPE positions
+   (``core.prefixcache``);
 3. all running sequences advance one token in a single batched decode step
    over fixed slots — attention reads scattered pages via the block table
    (``repro.kernels.paged_attention``; a pure-XLA reference path is the
@@ -34,13 +37,14 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.core.paging.allocator import BlockAllocator, BlockTable
+from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.iteration import IterationScheduler
 from repro.core.scheduling.request import Phase, Request
 from repro.kernels import ops, ref
 from repro.models import Model
 from repro.models import sampling
 from repro.models.layers import dense, embed, mlp, rms_norm, unembed
-from repro.models.attention import apply_rope
+from repro.models.attention import apply_rope, blockwise_attention
 
 
 @dataclasses.dataclass
@@ -52,6 +56,13 @@ class EngineConfig:
     use_kernel: bool = False  # True => Pallas paged_attention (interpret on CPU)
     temperature: float = 0.0
     seed: int = 0
+    # per-sequence context cap; None falls back to ArchConfig.max_seq_len and
+    # then to the whole page supply. Sizes the (n, max_pages) block-table
+    # transfer each decode step, so keep it at the real serving limit.
+    max_context_len: Optional[int] = None
+    # radix-tree prefix KV cache: share prompt pages across requests and
+    # prefill only the uncached suffix
+    enable_prefix_cache: bool = False
 
 
 class PagedEngine:
@@ -72,10 +83,18 @@ class PagedEngine:
                                   cfg.head_dim), cfg.param_dtype)
         self.v_pages = jnp.zeros_like(self.k_pages)
         self.allocator = BlockAllocator(P, ps)
+        self.prefix_cache = PrefixCache(self.allocator) \
+            if ecfg.enable_prefix_cache else None
         self.scheduler = IterationScheduler(
             self.allocator, max_running=ecfg.max_slots,
-            max_tokens_per_iter=ecfg.max_tokens_per_iter)
-        self.max_pages_per_seq = P  # block-table width (worst case)
+            max_tokens_per_iter=ecfg.max_tokens_per_iter,
+            prefix_cache=self.prefix_cache)
+        # block-table width: the real per-sequence context limit, not the
+        # whole page supply — shrinks the (n, max_pages) host->device
+        # transfer every decode step
+        max_ctx = ecfg.max_context_len or cfg.max_seq_len or P * ps
+        self.max_context_len = min(max_ctx, P * ps)
+        self.max_pages_per_seq = -(-self.max_context_len // ps)  # ceil
         self.slots: Dict[int, int] = {}  # request_id -> slot
         self.free_slots = list(range(ecfg.max_slots - 1, -1, -1))
         self.last_token = np.zeros(ecfg.max_slots, np.int32)
@@ -103,6 +122,68 @@ class PagedEngine:
         k_pages = k_pages.at[:, page_ids].set(k)
         v_pages = v_pages.at[:, page_ids].set(v)
         return logits[0], k_pages, v_pages
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _prefill_suffix_fn(self, params, k_pages, v_pages, tokens,
+                           prefix_ids, suffix_ids):
+        """Cached-prefix prefill: compute only the prompt *suffix*.
+
+        tokens: (1, S) suffix token ids; prefix_ids: (n_pref,) physical pages
+        holding the radix-cached prefix KV (page-aligned, RoPE already applied
+        at absolute positions 0..C-1); suffix_ids: (n_suf,) pages for the
+        suffix. Suffix queries run at absolute positions C..C+S-1 and attend
+        over gathered prefix pages + themselves. Returns (logits (V,), pages).
+        """
+        cfg = self.cfg
+        ecfg = self.ecfg
+        ps = ecfg.page_size
+        s = tokens.shape[1]
+        c = prefix_ids.shape[0] * ps  # cached prefix length (page-aligned)
+        nsuf = suffix_ids.shape[0]
+        pad = nsuf * ps - s
+        positions = c + jnp.arange(s)
+        seg = self.model.plan[0]
+        p_seg = params["segments"][0]
+        window = cfg.sliding_window if seg.attn_kind == "swa" else None
+        x = embed(params["embed"], tokens)  # (1, s, d)
+
+        def layer(carry, scanned):
+            xx, = carry
+            p_i, kp, vp = scanned  # kp/vp: (P+1, ps, Hkv, Dh)
+            h = rms_norm(p_i["ln1"], xx, cfg.norm_eps)
+            q = dense(p_i["attn"]["wq"], h).reshape(
+                1, s, cfg.num_heads, cfg.head_dim)
+            k = dense(p_i["attn"]["wk"], h).reshape(
+                1, s, cfg.num_kv_heads, cfg.head_dim)
+            v = dense(p_i["attn"]["wv"], h).reshape(
+                1, s, cfg.num_kv_heads, cfg.head_dim)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            ksuf = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0))).reshape(
+                nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
+            vsuf = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0))).reshape(
+                nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
+            kp = kp.at[suffix_ids].set(ksuf.astype(kp.dtype))
+            vp = vp.at[suffix_ids].set(vsuf.astype(vp.dtype))
+            kpre = kp[prefix_ids].reshape(
+                1, c, cfg.num_kv_heads, cfg.head_dim)
+            vpre = vp[prefix_ids].reshape(
+                1, c, cfg.num_kv_heads, cfg.head_dim)
+            kcat = jnp.concatenate([kpre.astype(k.dtype), k], axis=1)
+            vcat = jnp.concatenate([vpre.astype(v.dtype), v], axis=1)
+            att = blockwise_attention(q, kcat, vcat, causal=True,
+                                      window=window, q_offset=c)
+            att = att.reshape(1, s, cfg.num_heads * cfg.head_dim)
+            y = xx + dense(p_i["attn"]["wo"], att)
+            h2 = rms_norm(p_i["ln2"], y, cfg.norm_eps)
+            y = y + mlp(p_i["mlp"], h2)
+            return (y,), (kp, vp)
+
+        (x,), (k_pages, v_pages) = jax.lax.scan(
+            layer, (x,), (p_seg, k_pages, v_pages))
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x[:, -1:], cfg.vocab_size)
+        return logits[0, 0], k_pages, v_pages
 
     @partial(jax.jit, static_argnums=(0,))
     def _decode_fn(self, params, k_pages, v_pages, tokens, positions,
@@ -162,6 +243,11 @@ class PagedEngine:
     # -- engine loop ------------------------------------------------------------
 
     def add_request(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens > self.max_context_len:
+            raise ValueError(
+                f"request {req.request_id} needs "
+                f"{req.prompt_len + req.max_new_tokens} context tokens, "
+                f"engine limit is {self.max_context_len}")
         self.scheduler.add_request(req)
 
     def _ctx_arrays(self):
@@ -188,10 +274,22 @@ class PagedEngine:
             slot = self.free_slots.pop()
             self.slots[req.request_id] = slot
             table = self.scheduler.tables[req.request_id]
-            page_ids = jnp.asarray(table.blocks, jnp.int32)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, self.k_pages, self.v_pages = self._prefill_fn(
-                self.params, self.k_pages, self.v_pages, tokens, page_ids)
+            cached = req.num_cached_tokens
+            if cached > 0:
+                # radix-cache hit: prefill only the uncached suffix at its
+                # absolute positions, reading the prefix KV from shared pages
+                n_pref = cached // self.ecfg.page_size
+                prefix_ids = jnp.asarray(table.blocks[:n_pref], jnp.int32)
+                suffix_ids = jnp.asarray(table.blocks[n_pref:], jnp.int32)
+                tokens = jnp.asarray(req.prompt[cached:], jnp.int32)[None]
+                logits, self.k_pages, self.v_pages = self._prefill_suffix_fn(
+                    self.params, self.k_pages, self.v_pages, tokens,
+                    prefix_ids, suffix_ids)
+            else:
+                page_ids = jnp.asarray(table.blocks, jnp.int32)
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, self.k_pages, self.v_pages = self._prefill_fn(
+                    self.params, self.k_pages, self.v_pages, tokens, page_ids)
             tok = self._sample(logits[None])[0]
             req.output.append(int(tok))
             self.last_token[slot] = int(tok)
@@ -242,3 +340,8 @@ class PagedEngine:
     # -- stats ------------------------------------------------------------------
     def kv_utilization(self) -> float:
         return self.allocator.utilization(list(self.scheduler.tables.values()))
+
+    def prefix_cache_stats(self) -> Dict[str, float]:
+        if self.prefix_cache is None:
+            return {}
+        return self.prefix_cache.stats()

@@ -29,6 +29,7 @@ from repro.core.distkv.rmanager import RManager
 from repro.core.paging.allocator import (BlockAllocator,
                                          ContiguousPreallocAllocator,
                                          OutOfBlocks)
+from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.batch import BatchScheduler
 from repro.core.scheduling.iteration import IterationScheduler
 from repro.core.scheduling.request import Phase, Request
@@ -58,10 +59,20 @@ class SimResult:
     kv_utilization: float = 1.0
     preemptions: int = 0
     rejected: int = 0
+    # radix prefix-cache stats (None when the cache is disabled)
+    prefix_hit_rate: Optional[float] = None
+    cached_pages: int = 0
 
     @property
     def finished(self) -> List[Request]:
         return [r for r in self.requests if r.finish_time is not None]
+
+    @property
+    def mean_ttft(self) -> float:
+        """Mean time-to-first-token (prefill queueing + compute)."""
+        ts = [r.first_token_time - r.arrival_time for r in self.requests
+              if r.first_token_time is not None]
+        return float(np.mean(ts)) if ts else float("inf")
 
     @property
     def completed_frac(self) -> float:
@@ -91,12 +102,17 @@ class SimResult:
 def make_workload(n: int, *, rate: float, dist: str = "sharegpt",
                   seed: int = 0, long_frac: float = 0.0,
                   long_len: int = 16_384,
-                  max_len: int = 2048) -> List[Request]:
+                  max_len: int = 2048,
+                  materialize_tokens: bool = False,
+                  vocab: int = 32_000) -> List[Request]:
     """Poisson arrivals; prompt/output lengths follow the named distribution.
 
     ``dist``: "sharegpt" (long, heavy-tailed outputs) | "alpaca" (short).
     ``long_frac``: fraction of requests with ~``long_len`` total context
-    (the Fig. 10 knob: 1% / 10% long requests)."""
+    (the Fig. 10 knob: 1% / 10% long requests).
+    ``materialize_tokens``: fill ``prompt`` with (unique) random token ids so
+    the radix prefix cache has something to key on — the unique-prompt
+    baseline for the prefix-cache sweep."""
     rng = np.random.default_rng(seed)
     arr = np.cumsum(rng.exponential(1.0 / rate, n))
     reqs = []
@@ -115,9 +131,81 @@ def make_workload(n: int, *, rate: float, dist: str = "sharegpt",
             total = long_len
             p = max(4, int(total * rng.uniform(0.90, 0.97)))
             o = max(1, total - p)
-        reqs.append(Request(i, float(arr[i]), [], max_new_tokens=o,
+        prompt = rng.integers(0, vocab, p).tolist() if materialize_tokens \
+            else []
+        reqs.append(Request(i, float(arr[i]), prompt, max_new_tokens=o,
                             prompt_len=p))
     return reqs
+
+
+def make_shared_prefix_workload(n: int, *, rate: float, n_groups: int = 4,
+                                prefix_len: int = 512, suffix_len: int = 64,
+                                out_len: int = 128, seed: int = 0,
+                                vocab: int = 32_000) -> List[Request]:
+    """Shared-system-prompt traffic: each request is one of ``n_groups``
+    shared system prompts plus a unique user suffix (real token ids so the
+    radix cache can key on pages)."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    prefixes = [rng.integers(0, vocab, prefix_len).tolist()
+                for _ in range(n_groups)]
+    reqs = []
+    for i in range(n):
+        suf = int(rng.integers(max(1, suffix_len // 2), suffix_len + 1))
+        prompt = prefixes[i % n_groups] + rng.integers(0, vocab, suf).tolist()
+        o = int(np.clip(rng.lognormal(np.log(out_len), 0.4), 1, 4 * out_len))
+        reqs.append(Request(i, float(arr[i]), prompt, max_new_tokens=o))
+    return reqs
+
+
+def make_few_shot_workload(n: int, *, rate: float, template_len: int = 1024,
+                           question_len: int = 48, out_len: int = 32,
+                           seed: int = 0, vocab: int = 32_000) -> List[Request]:
+    """Few-shot template traffic: every request shares ONE long in-context
+    example block and differs only in a short question (classification /
+    extraction serving, the highest-hit-rate scenario)."""
+    return make_shared_prefix_workload(
+        n, rate=rate, n_groups=1, prefix_len=template_len,
+        suffix_len=question_len, out_len=out_len, seed=seed, vocab=vocab)
+
+
+def make_multi_turn_workload(n_sessions: int, n_turns: int, *, rate: float,
+                             system_len: int = 128, user_len: int = 48,
+                             reply_len: int = 96, think_time: float = 2.0,
+                             service_time_per_token: float = 0.005,
+                             seed: int = 0,
+                             vocab: int = 32_000) -> List[Request]:
+    """Multi-turn chat: turn ``t`` resends the full history (system prompt +
+    prior user/assistant turns) plus a new user message, as chat clients do.
+    Assistant replies are synthesized at build time (the simulator emits
+    placeholder tokens, not real ones); the radix cache reuses the history's
+    full pages across turns, so the hit rate grows with conversation depth.
+
+    A real client cannot send turn ``t+1`` before turn ``t``'s reply streamed
+    back, so the next arrival is spaced by an estimate of the reply's service
+    time (``out_tokens * service_time_per_token``) plus ``think_time``. The
+    estimate is approximate — under heavy congestion a turn may still arrive
+    before its predecessor finished and simply miss the cache for the newest
+    history pages."""
+    rng = np.random.default_rng(seed)
+    starts = np.cumsum(rng.exponential(1.0 / rate, n_sessions))
+    reqs = []
+    rid = 0
+    for s in range(n_sessions):
+        history = rng.integers(0, vocab, system_len).tolist()
+        t_arr = float(starts[s])
+        for _ in range(n_turns):
+            user = rng.integers(
+                0, vocab, int(rng.integers(max(1, user_len // 2),
+                                           user_len + 1))).tolist()
+            prompt = history + user
+            o = int(rng.integers(max(1, reply_len // 2), reply_len + 1))
+            reqs.append(Request(rid, t_arr, list(prompt), max_new_tokens=o))
+            rid += 1
+            # stand-in for the assistant reply the client would resend
+            history = prompt + rng.integers(0, vocab, o).tolist()
+            t_arr += o * service_time_per_token + think_time
+    return sorted(reqs, key=lambda r: r.arrival_time)
 
 
 # ---------------------------------------------------------------------------
@@ -127,12 +215,22 @@ def make_workload(n: int, *, rate: float, dist: str = "sharegpt",
 def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    block_size: int = 16, max_running: int = 256,
                    max_tokens_per_iter: int = 8192,
+                   prefix_cache: bool = False,
                    cost: Optional[CostModel] = None) -> SimResult:
+    """``prefix_cache``: attach a radix-tree prefix KV cache — admission
+    charges only the uncached prompt suffix (requests need real token ids,
+    e.g. from :func:`make_shared_prefix_workload`)."""
     cost = cost or CostModel()
     alloc = BlockAllocator(num_blocks, block_size)
+    pcache = PrefixCache(alloc) if prefix_cache else None
     sched = IterationScheduler(alloc, max_running=max_running,
-                               max_tokens_per_iter=max_tokens_per_iter)
-    return _run_iteration_sim(requests, sched, alloc, cost)
+                               max_tokens_per_iter=max_tokens_per_iter,
+                               prefix_cache=pcache)
+    res = _run_iteration_sim(requests, sched, alloc, cost)
+    if pcache is not None:
+        res.prefix_hit_rate = pcache.hit_rate
+        res.cached_pages = pcache.num_pages
+    return res
 
 
 def _run_iteration_sim(requests, sched, alloc, cost) -> SimResult:

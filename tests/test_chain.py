@@ -3,7 +3,7 @@ tests for the NSGA-II invariants."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.chain import (Chain, ChainSequenceProblem, decode_chain,
                               find_best_chain, hypervolume_2d, knee_chain,

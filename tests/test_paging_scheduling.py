@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.paging import (BlockAllocator, BlockTable,
                                ContiguousPreallocAllocator, OutOfBlocks)
@@ -71,6 +71,62 @@ def test_allocator_conservation_property(ops):
     for t in tables:
         a.free_table(t)
     assert a.num_free == 64
+
+
+def test_fork_family_cow_tail_and_refcounted_free():
+    """Three-way fork family: every fork writing into the shared half-full
+    tail COWs to its own copy; frees in any order return every block."""
+    a = BlockAllocator(16, 8)
+    root = BlockTable()
+    a.append_tokens(root, 12)  # 2 blocks, tail half-full
+    forks = [a.fork(root) for _ in range(2)]
+    assert a.refcount_of(root.blocks[0]) == 3
+    shared_tail = root.blocks[-1]
+    for f in forks:
+        a.append_tokens(f, 2)
+        assert f.blocks[-1] != shared_tail, "fork write must COW the tail"
+    # root still owns the original tail and may write it in place now that
+    # the forks have moved off it
+    assert a.refcount_of(shared_tail) == 1
+    a.append_tokens(root, 2)
+    assert root.blocks[-1] == shared_tail
+    a.free_table(forks[0])
+    a.free_table(root)
+    assert a.refcount_of(forks[1].blocks[0]) == 1, \
+        "surviving fork keeps the shared prompt block alive"
+    a.free_table(forks[1])
+    assert a.num_free == 16 and not a.refcount
+
+
+def test_decref_double_free_raises():
+    a = BlockAllocator(4, 8)
+    t = BlockTable()
+    a.append_tokens(t, 8)
+    b = t.blocks[0]
+    a.decref(b)
+    with pytest.raises(ValueError, match="double free|unknown"):
+        a.decref(b)
+
+
+def test_incref_unknown_block_raises():
+    a = BlockAllocator(4, 8)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.incref(3)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.incref(99)
+
+
+def test_refcount_of():
+    a = BlockAllocator(4, 8)
+    t = BlockTable()
+    a.append_tokens(t, 8)
+    b = t.blocks[0]
+    assert a.refcount_of(b) == 1
+    a.incref(b)
+    assert a.refcount_of(b) == 2
+    a.decref(b)
+    a.decref(b)
+    assert a.refcount_of(b) == 0  # free blocks report 0, no KeyError
 
 
 def test_prealloc_policies():
@@ -164,6 +220,33 @@ def test_scheduler_never_leaks_blocks(seed):
         s.complete_iteration(plan, float(it))
     assert all(r.phase == Phase.FINISHED for r in reqs)
     assert a.num_free == 32 and not a.refcount
+
+
+def test_preemption_victim_leaves_decode_plan():
+    """A victim picked after it already joined this iteration's decode batch
+    must be rescinded from the plan — otherwise the engine decodes a request
+    whose block table was just freed (KeyError downstream)."""
+    a = BlockAllocator(6, 4)
+    s = IterationScheduler(a, max_running=4, max_tokens_per_iter=999)
+    ra = Request(0, 0.0, list(range(7)), max_new_tokens=50)
+    rb = Request(1, 0.0, list(range(8)), max_new_tokens=50)
+    s.add_request(ra)
+    s.add_request(rb)
+    preempted_seen = 0
+    for it in range(60):  # joint demand exceeds the pool -> steady thrash
+        plan = s.schedule()
+        if plan.empty and not s.waiting:
+            break
+        preempted_seen += len(plan.preempted)
+        assert not (set(r.request_id for r in plan.decode)
+                    & set(r.request_id for r in plan.preempted)), \
+            "request scheduled to decode AND preempted in one iteration"
+        for r in plan.decode:
+            assert r.request_id in s.tables, "decode entry with freed table"
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+        s.complete_iteration(plan, float(it))
+    assert preempted_seen > 0, "test config should force preemption"
 
 
 def test_batch_scheduler_holds_until_batch_done():
