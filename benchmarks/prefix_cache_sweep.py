@@ -1,8 +1,9 @@
 """Radix prefix-cache sweep: hit-rate, TTFT, and throughput vs the no-cache
 paged baseline across the shared-prefix serving scenarios.
 
-Four workloads through the *real* scheduler + allocator + radix tree
-(`core.prefixcache`), with the OPT-13B iteration cost model:
+Four workloads replayed through the LLMService front-end over SimBackend —
+the *real* scheduler + allocator + radix tree (`core.prefixcache`) with the
+OPT-13B iteration cost model:
 
 * shared-prefix — a handful of system prompts fan out over all requests
 * few-shot     — one long in-context template, short questions
@@ -13,10 +14,11 @@ Four workloads through the *real* scheduler + allocator + radix tree
 
 from __future__ import annotations
 
-from repro.serving.simulator import (make_few_shot_workload,
+from repro.serving.api import LLMService
+from repro.serving.simulator import (SimBackend, make_few_shot_workload,
                                      make_multi_turn_workload,
                                      make_shared_prefix_workload,
-                                     make_workload, simulate_paged)
+                                     make_workload)
 
 TOKEN_SLOTS = 16_384
 BLOCK_SIZE = 16
@@ -40,14 +42,20 @@ def _scenarios(n_requests: int):
     ]
 
 
+def _replay(wl, prefix_cache: bool):
+    svc = LLMService(SimBackend(num_blocks=TOKEN_SLOTS // BLOCK_SIZE,
+                                block_size=BLOCK_SIZE,
+                                prefix_cache=prefix_cache))
+    # fresh Request objects per run — the backend mutates them
+    _, stats = svc.replay(wl())
+    return stats
+
+
 def run(n_requests: int = 200, verbose: bool = True):
     rows = []
     for name, wl in _scenarios(n_requests):
-        # fresh Request objects per run — the simulator mutates them
-        base = simulate_paged(wl(), num_blocks=TOKEN_SLOTS // BLOCK_SIZE,
-                              block_size=BLOCK_SIZE)
-        pc = simulate_paged(wl(), num_blocks=TOKEN_SLOTS // BLOCK_SIZE,
-                            block_size=BLOCK_SIZE, prefix_cache=True)
+        base = _replay(wl, prefix_cache=False)
+        pc = _replay(wl, prefix_cache=True)
         rows.append({
             "workload": name,
             "hit_rate": pc.prefix_hit_rate,

@@ -5,11 +5,27 @@ Two regimes:
 * long context FITS one instance  -> DistKV reduces preemption/queueing;
 * long context EXCEEDS one instance -> the baseline must reject; DistKV is
   the only system that serves those requests at all (completion rate).
-"""
+
+A third column replays the same trace through the LLMService front-end over
+a single pooled-memory SimBackend (all instances' blocks in one allocator)
+— the upper bound DistKV's borrowing approaches."""
 
 from __future__ import annotations
 
-from repro.serving.simulator import make_workload, simulate_distkv
+from repro.serving.api import LLMService
+from repro.serving.simulator import SimBackend, make_workload, simulate_distkv
+
+N_INSTANCES = 4
+
+
+def _pooled(wl, blocks_per_instance: int):
+    """Single pooled instance with the cluster's total KV memory, fronted by
+    LLMService (what perfect borrowing would look like)."""
+    svc = LLMService(SimBackend(
+        num_blocks=N_INSTANCES * blocks_per_instance, block_size=16,
+        max_running=256))
+    _, stats = svc.replay(wl())
+    return stats
 
 
 def run(n_requests: int = 240, verbose: bool = True):
@@ -21,8 +37,11 @@ def run(n_requests: int = 240, verbose: bool = True):
                                        dist="sharegpt", seed=1,
                                        long_frac=lf, long_len=long_len,
                                        max_len=2048)
-            rd = simulate_distkv(wl(), borrow=True, blocks_per_instance=bpi)
-            rn = simulate_distkv(wl(), borrow=False, blocks_per_instance=bpi)
+            rd = simulate_distkv(wl(), borrow=True, blocks_per_instance=bpi,
+                                 n_instances=N_INSTANCES)
+            rn = simulate_distkv(wl(), borrow=False, blocks_per_instance=bpi,
+                                 n_instances=N_INSTANCES)
+            pooled = _pooled(wl, bpi)
             row = dict(regime=regime, long_frac=lf,
                        distkv_thr=rd.throughput_tokens_per_s,
                        distkv_done=rd.completed_frac,
@@ -30,6 +49,8 @@ def run(n_requests: int = 240, verbose: bool = True):
                        local_done=rn.completed_frac,
                        local_rejected=rn.rejected,
                        local_preempt=rn.preemptions,
+                       pooled_thr=pooled.throughput_tokens_per_s,
+                       pooled_done=pooled.completed_frac,
                        gain=rd.throughput_tokens_per_s /
                        max(rn.throughput_tokens_per_s, 1e-9))
             out.append(row)
@@ -41,6 +62,8 @@ def run(n_requests: int = 240, verbose: bool = True):
                       f"(done {row['local_done']:.0%}, "
                       f"rej {row['local_rejected']}, "
                       f"pre {row['local_preempt']}) | "
+                      f"pooled {row['pooled_thr']:6.0f} tok/s "
+                      f"(done {row['pooled_done']:.0%}) | "
                       f"gain {row['gain']:.2f}x")
     return out
 

@@ -1,11 +1,14 @@
 """Paper Fig. 9: vLLM (paged) vs Orca (Oracle/Pow2/Max) — normalized latency
-vs request rate, ShareGPT- and Alpaca-like workloads, OPT-13B cost model."""
+vs request rate, ShareGPT- and Alpaca-like workloads, OPT-13B cost model.
+
+The paged system runs through the LLMService front-end over a SimBackend
+(the same API the real engine serves behind); the Orca baselines keep their
+contiguous-prealloc simulator, which has no paged backend to front."""
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.serving.simulator import (CostModel, make_workload, simulate_paged,
+from repro.serving.api import LLMService
+from repro.serving.simulator import (SimBackend, make_workload,
                                      simulate_prealloc)
 
 # memory sized like the paper's A100-40G serving OPT-13B: ~13 GB free for KV
@@ -25,9 +28,11 @@ def run(n_requests: int = 400, verbose: bool = True):
                 return make_workload(n_requests, rate=rate, dist=dist,
                                      seed=7)
             row = {"rate": rate}
-            r = simulate_paged(wl(), num_blocks=TOKEN_SLOTS // BLOCK_SIZE,
-                               block_size=BLOCK_SIZE)
-            row["vLLM-paged"] = r.mean_normalized_latency
+            svc = LLMService(SimBackend(
+                num_blocks=TOKEN_SLOTS // BLOCK_SIZE,
+                block_size=BLOCK_SIZE))
+            _, stats = svc.replay(wl())
+            row["vLLM-paged"] = stats.mean_normalized_latency
             for pol in ("oracle", "pow2", "max"):
                 r = simulate_prealloc(wl(), total_slots=TOKEN_SLOTS,
                                       policy=pol)

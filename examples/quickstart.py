@@ -1,15 +1,14 @@
 """Quickstart: train a small model on the synthetic corpus, checkpoint it,
-and serve a few requests through the continuous-batching engine.
+and serve a few requests through the LLMService front-end (continuous
+batching on the paged engine).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.core.scheduling.request import Request
-from repro.models import Model
+from repro.serving.api import LLMService, SamplingParams
 from repro.serving.engine import EngineConfig, PagedEngine
 from repro.training import checkpoint
 from repro.training.optimizer import OptConfig
@@ -31,22 +30,18 @@ def main():
                            {"params": res["params"]})
     print(f"checkpoint written to {path}")
 
-    print("\n== serving the trained model (continuous batching) ==")
-    model = Model(cfg, remat=False)
+    print("\n== serving the trained model (LLMService, continuous batching) ==")
     restored = checkpoint.restore("/tmp/quickstart_ckpt", 120,
                                   {"params": res["params"]})
     eng = PagedEngine(cfg, restored["params"],
                       EngineConfig(num_pages=128, page_size=8, max_slots=4))
+    svc = LLMService(eng)
     rng = np.random.default_rng(0)
-    reqs = [Request(i, 0.0,
-                    rng.integers(2, cfg.vocab_size, 8).tolist(),
-                    max_new_tokens=8) for i in range(4)]
-    for r in reqs:
-        eng.add_request(r)
-    eng.run_to_completion()
-    for r in reqs:
-        print(f"req {r.request_id}: prompt={r.prompt[:4]}... -> "
-              f"{r.full_output}")
+    prompts = [rng.integers(2, cfg.vocab_size, 8).tolist() for _ in range(4)]
+    outs = svc.generate(prompts, SamplingParams(max_new_tokens=8))
+    for out in outs:
+        print(f"req {out.request_id}: {out.token_ids} "
+              f"({out.finish_reason}, ttft {out.metrics.ttft:.2f}s)")
     print(f"kv pages free: {eng.allocator.num_free}/{eng.allocator.num_blocks}")
 
 

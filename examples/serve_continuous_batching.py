@@ -1,6 +1,7 @@
-"""ORCA iteration-level scheduling + vLLM paging on a real model: requests
-arrive over time, join mid-flight, finish early, and (with tight memory)
-get preempted and recomputed — watch the engine iterate.
+"""ORCA iteration-level scheduling + vLLM paging on a real model, behind the
+LLMService front-end: requests arrive over time, join mid-flight, finish
+early, and (with tight memory) get preempted and recomputed — watch the
+service stream chunks as the engine iterates.
 
   PYTHONPATH=src python examples/serve_continuous_batching.py
 """
@@ -10,49 +11,42 @@ import numpy as np
 import jax
 
 from repro.configs import smoke_config
-from repro.core.scheduling.request import Request
 from repro.models import Model
+from repro.serving.api import LLMService, SamplingParams
 from repro.serving.engine import EngineConfig, PagedEngine
 
 
 def main():
-    cfg = smoke_config("paper-opt-13b") if False else smoke_config(
-        "h2o-danube-1.8b")
+    cfg = smoke_config("h2o-danube-1.8b")
     model = Model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     eng = PagedEngine(cfg, params, EngineConfig(
         num_pages=48, page_size=8, max_slots=3,  # tight: shows preemption
         max_tokens_per_iter=256))
+    svc = LLMService(eng)
 
     rng = np.random.default_rng(7)
-    reqs = []
     for i in range(8):
         plen = int(rng.integers(6, 20))
-        reqs.append(Request(i, arrival_time=i * 0.5,
-                            prompt=rng.integers(2, cfg.vocab_size,
-                                                plen).tolist(),
-                            max_new_tokens=int(rng.integers(4, 16))))
+        rid = svc.submit(
+            rng.integers(2, cfg.vocab_size, plen).tolist(),
+            SamplingParams(max_new_tokens=int(rng.integers(4, 16))),
+            arrival_time=i * 0.5)
+        print(f"submitted request {rid} (prompt {plen} tok)")
 
-    it, injected = 0, 0
-    while injected < len(reqs) or eng.scheduler.waiting or \
-            eng.scheduler.running:
-        # inject arrivals: 2 iterations ~ 1 "second"
-        while injected < len(reqs) and reqs[injected].arrival_time <= it / 2:
-            eng.add_request(reqs[injected])
-            print(f"[iter {it:3d}] + request {injected} arrives "
-                  f"(prompt {reqs[injected].prompt_len} tok, "
-                  f"wants {reqs[injected].max_new_tokens})")
-            injected += 1
-        finished = eng.step(now=float(it))
-        for r in finished:
-            print(f"[iter {it:3d}] - request {r.request_id} done: "
-                  f"{r.total_generated} tokens, "
-                  f"{r.preemptions} preemptions")
+    it = 0
+    while svc.pending and it < 500:
+        # virtual time: 2 engine iterations ~ 1 "second" of arrivals
+        for ch in svc.poll(now=it / 2):
+            if ch.finished:
+                print(f"[iter {it:3d}] - request {ch.request_id} done: "
+                      f"{ch.n_generated} tokens ({ch.finish_reason})")
         it += 1
-        if it > 500:
-            break
     print(f"\n{it} iterations, kv pages free "
           f"{eng.allocator.num_free}/{eng.allocator.num_blocks}")
+    out = svc.stats()
+    print(f"served {out.n_finished}/{out.n_requests} requests, "
+          f"{out.preemptions} preemptions")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
-"""Radix prefix-cache serving: N chat sessions over one shared system prompt.
+"""Radix prefix-cache serving through the LLMService front-end: N chat
+sessions over one shared system prompt.
 
-Runs the same traffic through two `PagedEngine` instances — cold (no cache)
+Runs the same traffic through two `PagedEngine` backends — cold (no cache)
 and with the radix-tree prefix cache — and prints per-request prefill work,
 the cache hit-rate, and KV page usage. With the cache, every request after
 the first computes only its own suffix tokens; the shared system-prompt pages
@@ -14,8 +15,8 @@ import numpy as np
 import jax
 
 from repro.configs import smoke_config
-from repro.core.scheduling.request import Request
 from repro.models import Model
+from repro.serving.api import LLMService, SamplingParams
 from repro.serving.engine import EngineConfig, PagedEngine
 
 N_SESSIONS = 8
@@ -25,16 +26,17 @@ SYSTEM_PROMPT_PAGES = 2
 
 def drive(eng, prompts, label):
     print(f"\n--- {label} ---")
+    svc = LLMService(eng, default_params=SamplingParams(max_new_tokens=4))
     outputs = []
     for i, prompt in enumerate(prompts):
-        req = Request(i, 0.0, list(prompt), max_new_tokens=4)
-        eng.add_request(req)
-        eng.run_to_completion()
-        cached = req.num_cached_tokens
-        print(f"session {i}: prompt {req.prompt_len:2d} tok, "
-              f"prefilled {req.prompt_len - cached:2d}, "
+        # sequential sessions: each generate() call sees the pages the
+        # previous session left in the radix tree
+        out = svc.generate([prompt])[0]
+        cached = out.metrics.num_cached_tokens
+        print(f"session {i}: prompt {out.prompt_len:2d} tok, "
+              f"prefilled {out.prompt_len - cached:2d}, "
               f"served from cache {cached:2d}")
-        outputs.append(req.full_output)
+        outputs.append(out.token_ids)
     used = eng.allocator.num_used
     print(f"kv pages in use after drain: {used}/{eng.allocator.num_blocks} "
           f"(cache-resident pages keep the shared prefix warm)")

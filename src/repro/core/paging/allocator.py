@@ -10,7 +10,7 @@ copy-on-write. Utilization statistics feed the paper's "ORCA uses only
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 class OutOfBlocks(Exception):
@@ -80,21 +80,27 @@ class BlockAllocator:
     def can_append(self, table: BlockTable, new_tokens: int) -> bool:
         return self.blocks_needed(table, new_tokens) <= self.num_free
 
-    def append_tokens(self, table: BlockTable, new_tokens: int) -> None:
+    def append_tokens(self, table: BlockTable,
+                      new_tokens: int) -> List[Tuple[int, int]]:
         """Grow ``table`` to hold ``new_tokens`` more tokens, applying COW to
-        the tail block if it is shared."""
+        the tail block if it is shared. Returns the ``(old, new)`` block
+        pairs of any copy-on-write replacement — the engine must copy the
+        old physical page's contents into the new page before writing."""
+        cow: List[Tuple[int, int]] = []
         if new_tokens <= 0:
-            return
+            return cow
         # copy-on-write: the block being written must be exclusively owned
         if table.blocks and table.num_tokens % self.block_size != 0:
             tail = table.blocks[-1]
             if self.refcount[tail] > 1:
                 fresh = self.alloc_block()
                 self.decref(tail)
-                table.blocks[-1] = fresh  # engine copies page contents
+                table.blocks[-1] = fresh
+                cow.append((tail, fresh))
         for _ in range(self.blocks_needed(table, new_tokens)):
             table.blocks.append(self.alloc_block())
         table.num_tokens += new_tokens
+        return cow
 
     def fork(self, table: BlockTable) -> BlockTable:
         """Share all pages (parallel sampling / beam search)."""

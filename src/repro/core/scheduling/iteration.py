@@ -26,7 +26,7 @@ page pressure LRU cache eviction runs before any preemption.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.paging.allocator import BlockAllocator, BlockTable
 from repro.core.prefixcache.radix import PrefixCache
@@ -38,6 +38,9 @@ class IterationPlan:
     prefill: List[Request]
     decode: List[Request]
     preempted: List[Request]
+    # copy-on-write block replacements this iteration: the engine must copy
+    # each old physical page into its new page before any decode write
+    cow: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
@@ -55,12 +58,21 @@ class IterationScheduler:
                  max_running: int = 64,
                  max_tokens_per_iter: int = 8192,
                  watermark: float = 0.01,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 max_preemptions: Optional[int] = None,
+                 cache_generated: bool = True):
         self.allocator = allocator
         self.max_running = max_running
         self.max_tokens = max_tokens_per_iter
         self.watermark_blocks = max(1, int(allocator.num_blocks * watermark))
         self.prefix_cache = prefix_cache
+        # a request preempted more than this many times is dropped with
+        # finish_reason "preempted-dropped" instead of recomputed forever
+        self.max_preemptions = max_preemptions
+        # insert *generated* tokens into the radix tree at finish, so a
+        # multi-turn follow-up resending the assistant reply hits the cache
+        # beyond the prompt. Disable when outputs are placeholder ids (sim).
+        self.cache_generated = cache_generated
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
@@ -71,12 +83,24 @@ class IterationScheduler:
         req.phase = Phase.WAITING
         self.waiting.append(req)
 
-    def finish(self, req: Request, now: float) -> None:
+    def finish(self, req: Request, now: float,
+               reason: Optional[str] = None) -> None:
         req.phase = Phase.FINISHED
         req.finish_time = now
+        req.finish_reason = reason or req.finish_reason_if_done \
+            or req.finish_reason
         if req.request_id in self.tables:
-            # prompt pages were already adopted by the radix tree at prefill
-            # completion; the tree's increfs keep them alive past free_table
+            table = self.tables[req.request_id]
+            # adopt the *generated* tokens' full pages too (the prompt pages
+            # were inserted at prefill completion): a multi-turn follow-up
+            # that resends this reply as history then hits past the prompt.
+            # KV exists for the first num_tokens context tokens — the final
+            # sampled token was never fed back, so its page may be partial.
+            if self.prefix_cache is not None and self.cache_generated \
+                    and len(req.prompt) == req.prompt_len:
+                toks = (req.prompt + req.output)[:table.num_tokens]
+                self.prefix_cache.insert(toks, table.blocks)
+            # the tree's increfs keep adopted pages alive past free_table
             self._release_cache_path(req)
             self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:
@@ -92,6 +116,7 @@ class IterationScheduler:
         prefill: List[Request] = []
         decode: List[Request] = []
         preempted: List[Request] = []
+        cow: List[Tuple[int, int]] = []
         budget = self.max_tokens
 
         # 1) running decodes first (latency priority), preempting if needed
@@ -125,7 +150,7 @@ class IterationScheduler:
                     preempted.append(req)
                     continue
                 preempted.append(victim)
-            self.allocator.append_tokens(table, 1)
+            cow.extend(self.allocator.append_tokens(table, 1))
             decode.append(req)
             budget -= 1
 
@@ -144,7 +169,14 @@ class IterationScheduler:
                 cached = len(path) * self.allocator.block_size
             need_tokens = req.prompt_len - cached
             if need_tokens > budget:
-                break
+                # chunked-prefill stand-in: a prompt larger than the whole
+                # iteration budget may run alone when the instance is
+                # otherwise idle — else huge prompts head-of-line-block
+                # forever (same policy as the DistKV simulator)
+                solo_ok = not decode and not prefill and \
+                    budget == self.max_tokens
+                if not solo_ok:
+                    break
             # lock before checking supply so eviction cannot claim the
             # matched pages out from under us
             table = BlockTable()
@@ -162,7 +194,7 @@ class IterationScheduler:
                     self.allocator.free_table(table)
                 break
             self.waiting.pop(0)
-            self.allocator.append_tokens(table, need_tokens)
+            cow.extend(self.allocator.append_tokens(table, need_tokens))
             self.tables[req.request_id] = table
             if path:
                 self._cache_paths[req.request_id] = path
@@ -175,7 +207,7 @@ class IterationScheduler:
             budget -= need_tokens
 
         return IterationPlan(prefill=prefill, decode=decode,
-                             preempted=preempted)
+                             preempted=preempted, cow=cow)
 
     def complete_iteration(self, plan: IterationPlan, now: float) -> List[Request]:
         """Mark phases + retire finished requests. Returns finished list."""
@@ -197,7 +229,34 @@ class IterationScheduler:
             if req.done:
                 self.finish(req, now)
                 finished.append(req)
+        # preemption budget: a request churning through recomputes is dropped
+        # (reported as "preempted-dropped") instead of thrashing forever
+        if self.max_preemptions is not None:
+            for req in plan.preempted:
+                # still in waiting = not re-admitted this very iteration
+                if req.preemptions > self.max_preemptions and \
+                        req in self.waiting:
+                    self.waiting.remove(req)
+                    self.finish(req, now, reason="preempted-dropped")
+                    finished.append(req)
         return finished
+
+    # -- best-of-n forks ------------------------------------------------------
+    def fork_from(self, parent: Request, child: Request) -> BlockTable:
+        """COW-fork ``child`` off ``parent`` right after the parent's
+        prefill: every prompt page is shared (refcounted; the first write
+        into a shared partial page triggers copy-on-write in
+        ``append_tokens``) and the child enters decode directly — no second
+        prefill. The caller samples the child's first token from the
+        parent's prefill logits."""
+        table = self.allocator.fork(self.tables[parent.request_id])
+        self.tables[child.request_id] = table
+        child.prompt = list(parent.prompt)
+        child.prompt_len = parent.prompt_len
+        child.num_cached_tokens = parent.prompt_len  # nothing recomputed
+        child.phase = Phase.INCREMENT
+        self.running.append(child)
+        return table
 
     # -- preemption ----------------------------------------------------------------
     def _preempt(self, req: Request) -> None:

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Any, List, Optional
 
 
 class Phase(enum.Enum):
@@ -23,7 +23,12 @@ class Request:
     max_new_tokens: int
     prompt_len: Optional[int] = None  # simulator-only requests set this
     eos_token: Optional[int] = None
-    n_samples: int = 1  # parallel sampling (KV shared via COW)
+    n_samples: int = 1  # deprecated: use SamplingParams.n via the service
+    # per-request decoding knobs (serving.api.SamplingParams; duck-typed here
+    # to keep this module dependency-free). None = engine defaults (greedy).
+    sampling: Optional[Any] = None
+    # best-of-n sibling: COW-forked off the parent's prefill by the backend
+    parent_id: Optional[int] = None
 
     phase: Phase = Phase.WAITING
     output: List[int] = dataclasses.field(default_factory=list)
@@ -31,8 +36,13 @@ class Request:
     # recompute but still belong to the client-visible output)
     committed_output: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
+    scheduled_time: Optional[float] = None  # first admission into a plan
     finish_time: Optional[float] = None
+    # one of serving.api.FINISH_REASONS once finished
+    finish_reason: Optional[str] = None
     preemptions: int = 0
+    # sum of log p(sampled token) under the model — best-of-n ranking
+    cumulative_logprob: float = 0.0
     # prompt tokens served from the radix prefix cache at the current
     # admission (page-aligned; the engine prefills only the remainder)
     num_cached_tokens: int = 0
@@ -58,11 +68,28 @@ class Request:
         return self.prompt_len + self.n_generated
 
     @property
-    def done(self) -> bool:
+    def stop_token_ids(self):
+        return self.sampling.stop_token_ids if self.sampling is not None \
+            else ()
+
+    @property
+    def finish_reason_if_done(self) -> Optional[str]:
+        """Finish reason the request has earned so far, or None while it
+        should keep decoding. Stop/eos on the *last sampled token* win over
+        the length cap (vLLM semantics)."""
+        last = self.output[-1] if self.output else None
+        if last is not None:
+            if last in self.stop_token_ids:
+                return "stop"
+            if self.eos_token is not None and last == self.eos_token:
+                return "eos"
         if self.n_generated >= self.max_new_tokens:
-            return True
-        return bool(self.output and self.eos_token is not None
-                    and self.output[-1] == self.eos_token)
+            return "length"
+        return None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason_if_done is not None
 
     def normalized_latency(self) -> Optional[float]:
         """Paper Fig. 9 metric: end-to-end latency / output length."""

@@ -1,8 +1,10 @@
-"""Serving launcher: continuous-batching engine on a trained (or random)
-model with a synthetic request stream.
+"""Serving launcher: the LLMService front-end over either backend — the real
+continuous-batching engine (wall-clock) or the cost-model simulator (virtual
+clock) — with a synthetic open-loop request stream.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --reduced --requests 16 --rate 4
+  PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 200
 """
 
 from __future__ import annotations
@@ -10,17 +12,35 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_config
-from repro.core.scheduling.request import Request
-from repro.models import Model
-from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.api import LLMService, SamplingParams
+
+
+def build_backend(args):
+    if args.backend == "sim":
+        from repro.serving.simulator import SimBackend
+        return SimBackend(num_blocks=args.pages, block_size=args.page_size,
+                          max_running=args.slots,
+                          prefix_cache=args.prefix_cache)
+    import jax
+    from repro.models import Model
+    from repro.serving.engine import EngineConfig, PagedEngine
+    cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return PagedEngine(cfg, params, EngineConfig(
+        num_pages=args.pages, page_size=args.page_size,
+        max_slots=args.slots, use_kernel=args.use_kernel,
+        enable_prefix_cache=args.prefix_cache))
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("engine", "sim"), default="engine",
+                    help="real PagedEngine (wall-clock) or cost-model "
+                         "SimBackend (virtual clock) — same LLMService API")
     ap.add_argument("--arch", choices=ARCH_IDS, default="h2o-danube-1.8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
@@ -30,53 +50,54 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="n parallel samples per prompt (COW-forked KV)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas paged-attention (interpret mode on CPU)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree prefix KV cache (cross-request reuse)")
     args = ap.parse_args()
 
-    cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
-    model = Model(cfg, remat=False)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = PagedEngine(cfg, params, EngineConfig(
-        num_pages=args.pages, page_size=args.page_size,
-        max_slots=args.slots, temperature=args.temperature,
-        use_kernel=args.use_kernel, enable_prefix_cache=args.prefix_cache))
+    backend = build_backend(args)
+    svc = LLMService(backend)
+    vocab = 32_000 if args.backend == "sim" else backend.cfg.vocab_size
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
-    reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
-        reqs.append(Request(i, float(arrivals[i]),
-                            rng.integers(0, cfg.vocab_size, plen).tolist(),
-                            max_new_tokens=int(rng.integers(
-                                2, args.max_new))))
+        svc.submit(rng.integers(0, vocab, plen).tolist(),
+                   SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  n=args.best_of,
+                                  max_new_tokens=int(rng.integers(
+                                      2, args.max_new)),
+                                  seed=int(i)),
+                   arrival_time=float(arrivals[i]))
 
     t0 = time.monotonic()
-    i = 0
-    while i < len(reqs) or eng.scheduler.waiting or eng.scheduler.running:
-        now = time.monotonic() - t0
-        while i < len(reqs) and reqs[i].arrival_time <= now:
-            eng.add_request(reqs[i])
-            i += 1
-        fin = eng.step(now)
-        for r in fin:
-            print(f"[{now:7.2f}s] req {r.request_id} done: "
-                  f"{len(r.full_output)} tokens "
-                  f"(norm-lat {r.normalized_latency():.3f}s/tok)")
-        if not fin and not eng.scheduler.running and i < len(reqs):
-            time.sleep(max(0.0, reqs[i].arrival_time - now))
-    tok = sum(r.total_generated for r in reqs)
-    dt = time.monotonic() - t0
-    print(f"served {len(reqs)} requests, {tok} tokens in {dt:.1f}s "
-          f"({tok/dt:.1f} tok/s, {eng.iterations} iterations), "
-          f"kv-util {eng.kv_utilization():.2f}")
-    stats = eng.prefix_cache_stats()
-    if stats:
-        print(f"prefix-cache hit-rate {stats['hit_rate']:.1%}, "
-              f"{stats['cached_pages']:.0f} pages resident")
+    while svc.pending:
+        now = time.monotonic() - t0 if args.backend == "engine" else None
+        for ch in svc.poll(now):
+            if ch.finished:
+                t = ch.time if ch.time is not None else now
+                print(f"[{t:7.2f}s] req {ch.request_id} done: "
+                      f"{ch.n_generated} tokens ({ch.finish_reason})")
+        if args.backend == "engine" and not backend.has_work and svc.pending:
+            time.sleep(0.005)  # wait for the next wall-clock arrival
+
+    stats = svc.stats()
+    dt = time.monotonic() - t0 if args.backend == "engine" else stats.makespan
+    print(f"served {stats.n_finished}/{stats.n_requests} requests, "
+          f"{stats.total_tokens} tokens in {dt:.1f}s "
+          f"({stats.total_tokens / max(dt, 1e-9):.1f} tok/s, "
+          f"{backend.iterations} iterations); "
+          f"mean ttft {stats.mean_ttft * 1e3:.1f}ms, "
+          f"mean norm-lat {stats.mean_normalized_latency:.3f}s/tok")
+    if stats.prefix_hit_rate is not None:
+        print(f"prefix-cache hit-rate {stats.prefix_hit_rate:.1%}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.layers import (NO_POLICY, ShardingPolicy, apply_rope, dense,
-                                 dense_init, norm_init, rms_norm)
+                                 dense_init, mlp, norm_init, rms_norm)
 
 # The dry-run's cost-model compiles set this so the query-chunk scan unrolls:
 # XLA's cost analysis counts a while body once regardless of trip count, so
@@ -175,6 +175,39 @@ def blockwise_attention(q, k, v, *, causal: bool = True,
     _, outs = lax.scan(body, None, (qs, qpos),
                        unroll=nq if CHUNK_UNROLL else 1)
     return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+
+
+def gqa_layer(cfg, p, x, positions, attend, *,
+              policy: ShardingPolicy = NO_POLICY):
+    """One full GQA transformer layer, parameterized by the attention
+    callable — the single layer body shared by the models' full-sequence
+    path, the engine's fused paged decode, and the cached-prefix suffix
+    prefill (which previously hand-rolled three copies of it).
+
+    ``x``: (B, S, D); ``positions``: (S,) or (B, S) absolute positions.
+    ``attend(q, k, v) -> (ctx, carry)`` receives roped q (B, S, H, Dh) and
+    roped k / raw v (B, S, Hkv, Dh), returns the attention context
+    (B, S, H, Dv) plus an arbitrary carry (e.g. updated KV page buffers)
+    threaded back to the caller. Layout: pre-norm, residual attention,
+    pre-norm residual MLP.
+    """
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    hn = rms_norm(p["ln1"], x, cfg.norm_eps)
+    q = dense(p["attn"]["wq"], hn).reshape(b, s, h, dh)
+    k = dense(p["attn"]["wk"], hn).reshape(b, s, hkv, dh)
+    v = dense(p["attn"]["wv"], hn).reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = policy.act(q, "heads_bshd")
+    k = policy.act(k, "kv_bshd")
+    v = policy.act(v, "kv_bshd")
+    ctx, carry = attend(q, k, v)
+    ctx = policy.act(ctx, "heads_bshd")
+    y = x + dense(p["attn"]["wo"], ctx.reshape(b, s, -1), policy, "act_bsd")
+    h2 = rms_norm(p["ln2"], y, cfg.norm_eps)
+    y = y + mlp(p["mlp"], h2, policy)
+    return y, carry
 
 
 def gqa_forward(cfg, p, x, positions, *, window=None, causal=True,

@@ -1,4 +1,13 @@
-"""Token sampling for the serving engine."""
+"""Token sampling for the serving engine.
+
+The fused decode path samples ALL slots in one call with **vectorized
+per-slot parameters** — a batch can mix greedy, temperature, top-k, and
+top-p requests without leaving the single jitted kernel. Per-request
+determinism: each row's PRNG key is derived from its own ``(seed, step)``
+pair, so a request draws the same stream whether it runs alone or batched,
+whatever slot it lands in, and across preemption/recompute (the step counter
+is the request's cumulative token index).
+"""
 
 from __future__ import annotations
 
@@ -10,8 +19,62 @@ def greedy(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def filter_logits(logits, top_k, top_p):
+    """Vectorized per-row top-k / nucleus filtering.
+
+    logits: (n, V) float; top_k: (n,) int32, 0 = disabled; top_p: (n,)
+    float in (0, 1], 1 = disabled. Returns logits with filtered entries at
+    ``-inf``. Nucleus keeps the *smallest* set of highest-probability tokens
+    whose mass reaches ``top_p`` (the argmax always survives).
+    """
+    n, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    order = jnp.argsort(-logits, axis=-1)  # descending
+    # rank[i, tok] = position of tok in row i's descending order
+    ranks = jnp.zeros((n, v), jnp.int32).at[
+        jnp.arange(n)[:, None], order].set(jnp.arange(v, dtype=jnp.int32))
+    k_eff = jnp.where(top_k > 0, top_k, v)
+    keep_k = ranks < k_eff[:, None]
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs_sorted = jax.nn.softmax(sorted_logits, axis=-1)
+    # exclusive cumulative mass: token t is kept iff the mass strictly above
+    # it is still short of top_p  ->  smallest set with mass >= top_p
+    cum_excl = jnp.cumsum(probs_sorted, axis=-1) - probs_sorted
+    keep_sorted = cum_excl < top_p[:, None]
+    keep_p = jnp.take_along_axis(keep_sorted, ranks, axis=-1)
+    return jnp.where(keep_k & keep_p, logits, -jnp.inf)
+
+
+def sample_batch(logits, seeds, steps, temperature, top_k, top_p):
+    """One fused sampling step over all decode slots.
+
+    logits: (n, V); seeds/steps: (n,) int32 per-request PRNG stream ids;
+    temperature/top_k/top_p: (n,). Rows with ``temperature <= 0`` are greedy
+    (argmax over raw logits). Temperature scaling happens BEFORE the
+    top-k/top-p filters (vLLM/HF semantics: the nucleus is taken over the
+    temperature-shaped distribution). Returns ``(tokens (n,) int32,
+    logprobs (n,) float32)`` — logprobs are log p(token) under the raw
+    (unfiltered, unscaled) distribution, for best-of-n ranking.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy_tok = greedy(logits)
+    # greedy rows get a dummy temperature of 1 so scaling stays finite;
+    # their sampled value is discarded below
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    scaled = filter_logits(logits / safe_t, top_k, top_p)
+    keys = jax.vmap(
+        lambda s, c: jax.random.fold_in(jax.random.PRNGKey(s), c))(
+            seeds, steps)
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    tokens = jnp.where(temperature > 0, drawn, greedy_tok)
+    logprobs = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), tokens[:, None], axis=-1)[:, 0]
+    return tokens, logprobs
+
+
 def sample(logits, key, *, temperature: float = 1.0, top_k: int = 0):
-    """logits: (B, V). temperature<=0 => greedy."""
+    """Scalar-parameter sampling (legacy path; the engine uses
+    :func:`sample_batch`). logits: (B, V). temperature<=0 => greedy."""
     if temperature <= 0:
         return greedy(logits)
     logits = logits.astype(jnp.float32) / temperature

@@ -115,6 +115,17 @@ def _layer_forward(cfg, seg: Segment, p, x, positions, *, policy,
     hybrid -> ((k, v), SSMCache); +(ck, cv) appended for cross layers.
     """
     window = cfg.sliding_window if seg.attn_kind == "swa" else None
+    if seg.mixer == "gqa" and seg.mlp_kind == "dense" and not seg.cross:
+        # plain GQA layer: share the one layer body with the serving
+        # engine's decode / suffix-prefill paths (attend = full-sequence
+        # blockwise attention; carry = the prefill cache seed)
+        def attend(q, k, v):
+            ctx = attn.blockwise_attention(q, k, v, causal=causal,
+                                           window=window, policy=policy)
+            return ctx, ((k, v) if collect_cache else None)
+
+        x, seed = attn.gqa_layer(cfg, p, x, positions, attend, policy=policy)
+        return x, jnp.zeros((), jnp.float32), seed
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     seed = None

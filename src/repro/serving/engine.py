@@ -13,7 +13,23 @@ Execution model per iteration (continuous batching):
 3. all running sequences advance one token in a single batched decode step
    over fixed slots — attention reads scattered pages via the block table
    (``repro.kernels.paged_attention``; a pure-XLA reference path is the
-   default on CPU, the Pallas kernel is switchable via ``use_kernel``).
+   default on CPU, the Pallas kernel is switchable via ``use_kernel``), and
+   sampling runs **fused with vectorized per-slot parameters**: each slot
+   applies its own request's temperature / top-k / top-p / seed
+   (``repro.models.sampling.sample_batch``), and stop/eos/length finish
+   reasons are checked per request.
+
+The engine implements the :class:`~repro.serving.api.ServingBackend`
+protocol; drive it through :class:`~repro.serving.api.LLMService` rather
+than hand-rolling ``step()`` loops. Per-request sampling lives on
+``Request.sampling`` (:class:`~repro.serving.api.SamplingParams`);
+``EngineConfig.temperature`` is **deprecated** and only seeds the default
+params for requests submitted without any. Best-of-n requests
+(``SamplingParams.n > 1``) COW-fork the parent's block table right after
+its prefill — siblings share every prompt page and diverge through the
+allocator's copy-on-write on the first partial-page write, with the engine
+copying the physical page contents for each ``(old, new)`` pair the
+scheduler reports.
 
 Divergence from paper noted (DESIGN.md §2.2): ORCA's selective batching fuses
 prefill+decode tokens into one ragged batch; XLA needs static shapes, so
@@ -22,6 +38,9 @@ iteration-level scheduling semantics (early exit, late join) are identical.
 
 Supports every *attention-cached* arch family (GQA/MQA/SWA). For paging, the
 block tables, COW forks and preemption come straight from ``core.paging``.
+The per-layer math (ln → qkv+rope → attend → wo → mlp) is the shared
+:func:`repro.models.attention.gqa_layer` body, parameterized here by paged
+attends.
 """
 
 from __future__ import annotations
@@ -43,8 +62,9 @@ from repro.core.scheduling.request import Phase, Request
 from repro.kernels import ops, ref
 from repro.models import Model
 from repro.models import sampling
-from repro.models.layers import dense, embed, mlp, rms_norm, unembed
-from repro.models.attention import apply_rope, blockwise_attention
+from repro.models.layers import embed, rms_norm, unembed
+from repro.models.attention import blockwise_attention, gqa_layer
+from repro.serving.api import SamplingParams
 
 
 @dataclasses.dataclass
@@ -54,6 +74,9 @@ class EngineConfig:
     max_slots: int = 8
     max_tokens_per_iter: int = 2048
     use_kernel: bool = False  # True => Pallas paged_attention (interpret on CPU)
+    # DEPRECATED: per-request SamplingParams (serving.api) supersede the
+    # engine-global temperature; this only seeds the default params applied
+    # to requests submitted without `sampling` set.
     temperature: float = 0.0
     seed: int = 0
     # per-sequence context cap; None falls back to ArchConfig.max_seq_len and
@@ -63,11 +86,14 @@ class EngineConfig:
     # radix-tree prefix KV cache: share prompt pages across requests and
     # prefill only the uncached suffix
     enable_prefix_cache: bool = False
+    # drop a request after this many preemptions (finish_reason
+    # "preempted-dropped"); None = recompute forever
+    max_preemptions: Optional[int] = None
 
 
 class PagedEngine:
     """Single-host engine instance (one "LLM service instance" in
-    InfiniteLLM terms)."""
+    InfiniteLLM terms). Implements the ServingBackend protocol."""
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig):
         self.cfg = cfg
@@ -88,7 +114,8 @@ class PagedEngine:
         self.scheduler = IterationScheduler(
             self.allocator, max_running=ecfg.max_slots,
             max_tokens_per_iter=ecfg.max_tokens_per_iter,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache,
+            max_preemptions=ecfg.max_preemptions)
         # block-table width: the real per-sequence context limit, not the
         # whole page supply — shrinks the (n, max_pages) host->device
         # transfer every decode step
@@ -98,8 +125,13 @@ class PagedEngine:
         self.slots: Dict[int, int] = {}  # request_id -> slot
         self.free_slots = list(range(ecfg.max_slots - 1, -1, -1))
         self.last_token = np.zeros(ecfg.max_slots, np.int32)
-        self.key = jax.random.PRNGKey(ecfg.seed)
         self.iterations = 0
+        # requests submitted without sampling params fall back to the
+        # (deprecated) engine-global temperature, greedy by default
+        self._default_sp = SamplingParams(temperature=ecfg.temperature)
+        self._sample_fn = jax.jit(sampling.sample_batch)
+        # best-of-n children awaiting their parent's prefill (COW fork)
+        self._pending_forks: Dict[int, List[Request]] = {}
 
     # -- jitted model steps ----------------------------------------------------
 
@@ -150,34 +182,28 @@ class PagedEngine:
         def layer(carry, scanned):
             xx, = carry
             p_i, kp, vp = scanned  # kp/vp: (P+1, ps, Hkv, Dh)
-            h = rms_norm(p_i["ln1"], xx, cfg.norm_eps)
-            q = dense(p_i["attn"]["wq"], h).reshape(
-                1, s, cfg.num_heads, cfg.head_dim)
-            k = dense(p_i["attn"]["wk"], h).reshape(
-                1, s, cfg.num_kv_heads, cfg.head_dim)
-            v = dense(p_i["attn"]["wv"], h).reshape(
-                1, s, cfg.num_kv_heads, cfg.head_dim)
-            q = apply_rope(q, positions, cfg.rope_theta)
-            k = apply_rope(k, positions, cfg.rope_theta)
-            ksuf = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0))).reshape(
-                nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
-            vsuf = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0))).reshape(
-                nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
-            kp = kp.at[suffix_ids].set(ksuf.astype(kp.dtype))
-            vp = vp.at[suffix_ids].set(vsuf.astype(vp.dtype))
-            kpre = kp[prefix_ids].reshape(
-                1, c, cfg.num_kv_heads, cfg.head_dim)
-            vpre = vp[prefix_ids].reshape(
-                1, c, cfg.num_kv_heads, cfg.head_dim)
-            kcat = jnp.concatenate([kpre.astype(k.dtype), k], axis=1)
-            vcat = jnp.concatenate([vpre.astype(v.dtype), v], axis=1)
-            att = blockwise_attention(q, kcat, vcat, causal=True,
-                                      window=window, q_offset=c)
-            att = att.reshape(1, s, cfg.num_heads * cfg.head_dim)
-            y = xx + dense(p_i["attn"]["wo"], att)
-            h2 = rms_norm(p_i["ln2"], y, cfg.norm_eps)
-            y = y + mlp(p_i["mlp"], h2)
-            return (y,), (kp, vp)
+
+            def attend(q, k, v):
+                # scatter the suffix K/V into its pages, gather the cached
+                # prefix pages, and attend over [prefix ++ suffix]
+                ksuf = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0))).reshape(
+                    nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
+                vsuf = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0))).reshape(
+                    nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
+                kp2 = kp.at[suffix_ids].set(ksuf.astype(kp.dtype))
+                vp2 = vp.at[suffix_ids].set(vsuf.astype(vp.dtype))
+                kpre = kp2[prefix_ids].reshape(
+                    1, c, cfg.num_kv_heads, cfg.head_dim)
+                vpre = vp2[prefix_ids].reshape(
+                    1, c, cfg.num_kv_heads, cfg.head_dim)
+                kcat = jnp.concatenate([kpre.astype(k.dtype), k], axis=1)
+                vcat = jnp.concatenate([vpre.astype(v.dtype), v], axis=1)
+                ctx = blockwise_attention(q, kcat, vcat, causal=True,
+                                          window=window, q_offset=c)
+                return ctx, (kp2, vp2)
+
+            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions, attend)
+            return (y,), (kp2, vp2)
 
         (x,), (k_pages, v_pages) = jax.lax.scan(
             layer, (x,), (p_seg, k_pages, v_pages))
@@ -200,7 +226,7 @@ class PagedEngine:
         p_seg = params["segments"][0]
         window = cfg.sliding_window if seg.attn_kind == "swa" else None
 
-        x = embed(params["embed"], tokens[:, None])[:, 0]  # (n, d)
+        x = embed(params["embed"], tokens[:, None])  # (n, 1, d)
         page_slot = block_tables[jnp.arange(n), positions // ps]  # (n,)
         # inactive slots (ctx_len == 0) write to the trash page
         page_slot = jnp.where(ctx_lens > 0, page_slot, ecfg.num_pages)
@@ -209,38 +235,30 @@ class PagedEngine:
         def layer(carry, scanned):
             xx, = carry
             p_i, kp, vp = scanned
-            h = rms_norm(p_i["ln1"], xx, cfg.norm_eps)[:, None]  # (n,1,d)
-            q = dense(p_i["attn"]["wq"], h).reshape(
-                n, 1, cfg.num_heads, cfg.head_dim)
-            k = dense(p_i["attn"]["wk"], h).reshape(
-                n, 1, cfg.num_kv_heads, cfg.head_dim)
-            v = dense(p_i["attn"]["wv"], h).reshape(
-                n, 1, cfg.num_kv_heads, cfg.head_dim)
-            q = apply_rope(q, positions[:, None], cfg.rope_theta)
-            k = apply_rope(k, positions[:, None], cfg.rope_theta)
-            kp = kp.at[page_slot, in_page].set(k[:, 0].astype(kp.dtype))
-            vp = vp.at[page_slot, in_page].set(v[:, 0].astype(vp.dtype))
-            if ecfg.use_kernel:
-                att = ops.paged_attention(
-                    q[:, 0], kp, vp, block_tables, ctx_lens, page_size=ps,
-                    window=window)
-            else:
-                att = ref.paged_attention_ref(
-                    q[:, 0], kp, vp, block_tables, ctx_lens, page_size=ps,
-                    window=window)
-            att = att.reshape(n, 1, cfg.num_heads * cfg.head_dim)
-            y = xx + dense(p_i["attn"]["wo"], att)[:, 0]
-            h2 = rms_norm(p_i["ln2"], y, cfg.norm_eps)[:, None]
-            y = y + mlp(p_i["mlp"], h2)[:, 0]
-            return (y,), (kp, vp)
+
+            def attend(q, k, v):
+                # write each slot's new K/V into its page, then paged
+                # attention over the block tables
+                kp2 = kp.at[page_slot, in_page].set(k[:, 0].astype(kp.dtype))
+                vp2 = vp.at[page_slot, in_page].set(v[:, 0].astype(vp.dtype))
+                att_fn = ops.paged_attention if ecfg.use_kernel \
+                    else ref.paged_attention_ref
+                att = att_fn(q[:, 0], kp2, vp2, block_tables, ctx_lens,
+                             page_size=ps, window=window)
+                return att.reshape(n, 1, cfg.num_heads, cfg.head_dim), \
+                    (kp2, vp2)
+
+            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
+                                      attend)
+            return (y,), (kp2, vp2)
 
         (x,), (k_pages, v_pages) = jax.lax.scan(
             layer, (x,), (p_seg, k_pages, v_pages))
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x[:, None], cfg.vocab_size)[:, 0]
+        logits = unembed(params["embed"], x, cfg.vocab_size)[:, 0]
         return logits, k_pages, v_pages
 
-    # -- engine loop ------------------------------------------------------------
+    # -- ServingBackend protocol -------------------------------------------------
 
     def add_request(self, req: Request) -> None:
         if req.prompt_len + req.max_new_tokens > self.max_context_len:
@@ -248,7 +266,22 @@ class PagedEngine:
                 f"request {req.request_id} needs "
                 f"{req.prompt_len + req.max_new_tokens} context tokens, "
                 f"engine limit is {self.max_context_len}")
+        if req.parent_id is not None and any(
+                r.request_id == req.parent_id for r in self.scheduler.waiting):
+            # best-of-n sibling: COW-forked off the parent's prefill instead
+            # of prefilling again (falls back to a plain request if no slot
+            # is free at fork time)
+            self._pending_forks.setdefault(req.parent_id, []).append(req)
+            return
         self.scheduler.add_request(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.waiting or self.scheduler.running
+                    or self._pending_forks)
+
+    def clock(self) -> Optional[float]:
+        return None  # wall-clock backend: the caller supplies `now`
 
     def _ctx_arrays(self):
         n = self.ecfg.max_slots
@@ -258,21 +291,80 @@ class PagedEngine:
         toks = np.zeros(n, np.int32)
         return bt, lens, pos, toks
 
+    # -- per-request sampling ----------------------------------------------------
+
+    def _sp_of(self, req: Request) -> SamplingParams:
+        return req.sampling if req.sampling is not None else self._default_sp
+
+    def _seed_of(self, req: Request) -> int:
+        sp = self._sp_of(req)
+        if sp.seed is not None:
+            return sp.seed & 0x7FFFFFFF
+        return (self.ecfg.seed * 1_000_003 + req.request_id * 7919
+                + 0x5BD1) & 0x7FFFFFFF
+
+    def _sample_rows(self, logits, reqs_by_row):
+        """Fused per-slot sampling. ``reqs_by_row``: list (len = batch rows)
+        of Request or None (inactive row). Returns (tokens, logprobs) np."""
+        n = logits.shape[0]
+        temp = np.zeros(n, np.float32)
+        topk = np.zeros(n, np.int32)
+        topp = np.ones(n, np.float32)
+        seeds = np.zeros(n, np.int32)
+        steps = np.zeros(n, np.int32)
+        for i, req in enumerate(reqs_by_row):
+            if req is None:
+                continue
+            sp = self._sp_of(req)
+            temp[i] = sp.temperature
+            topk[i] = sp.top_k
+            topp[i] = sp.top_p
+            seeds[i] = self._seed_of(req)
+            # cumulative token index: keeps the stream aligned across
+            # preemption/recompute (committed tokens advance the counter)
+            steps[i] = req.total_generated
+        toks, lps = self._sample_fn(logits, jnp.asarray(seeds),
+                                    jnp.asarray(steps), jnp.asarray(temp),
+                                    jnp.asarray(topk), jnp.asarray(topp))
+        return np.asarray(toks), np.asarray(lps)
+
+    def _sample_one(self, req: Request, logits_row):
+        toks, lps = self._sample_rows(logits_row[None], [req])
+        return int(toks[0]), float(lps[0])
+
+    def _emit(self, req: Request, slot: int, tok: int, lp: float) -> None:
+        req.output.append(tok)
+        req.cumulative_logprob += lp
+        self.last_token[slot] = tok
+
+    # -- engine loop ------------------------------------------------------------
+
     def step(self, now: Optional[float] = None) -> List[Request]:
         """Run ONE iteration (ORCA's unit of scheduling)."""
         now = time.monotonic() if now is None else now
         plan = self.scheduler.schedule()
         if plan.empty:
             return []
+        # COW: copy replaced shared pages before anything writes this
+        # iteration (the old block keeps its pre-iteration contents until
+        # the decode/prefill writes below)
+        if plan.cow:
+            old = jnp.asarray([o for o, _ in plan.cow], jnp.int32)
+            new = jnp.asarray([w for _, w in plan.cow], jnp.int32)
+            self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+            self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
         # release slots of preempted requests
         for req in plan.preempted:
             if req.request_id in self.slots:
                 self.free_slots.append(self.slots.pop(req.request_id))
 
         # --- prefills (initiation phase) ---
+        forked: List[Request] = []
         for req in plan.prefill:
             slot = self.free_slots.pop()
             self.slots[req.request_id] = slot
+            if req.scheduled_time is None:
+                req.scheduled_time = now
             table = self.scheduler.tables[req.request_id]
             cached = req.num_cached_tokens
             if cached > 0:
@@ -290,14 +382,18 @@ class PagedEngine:
                 tokens = jnp.asarray(req.prompt, jnp.int32)[None]
                 logits, self.k_pages, self.v_pages = self._prefill_fn(
                     self.params, self.k_pages, self.v_pages, tokens, page_ids)
-            tok = self._sample(logits[None])[0]
-            req.output.append(int(tok))
-            self.last_token[slot] = int(tok)
+            tok, lp = self._sample_one(req, logits)
+            self._emit(req, slot, tok, lp)
+            forked.extend(self._fork_children(req, logits, now))
+
+        # best-of-n children join the plan so completion/insertion sees them
+        plan.prefill.extend(forked)
 
         # --- fused decode step (increment phase) ---
         decode_reqs = [r for r in plan.decode]
         if decode_reqs:
             bt, lens, pos, toks = self._ctx_arrays()
+            row_reqs: List[Optional[Request]] = [None] * self.ecfg.max_slots
             for req in decode_reqs:
                 slot = self.slots[req.request_id]
                 table = self.scheduler.tables[req.request_id]
@@ -308,32 +404,50 @@ class PagedEngine:
                 lens[slot] = req.context_len
                 pos[slot] = req.context_len - 1
                 toks[slot] = self.last_token[slot]
+                row_reqs[slot] = req
             logits, self.k_pages, self.v_pages = self._decode_fn(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(bt),
                 jnp.asarray(lens))
-            sampled = self._sample(logits)
+            sampled, lps = self._sample_rows(logits, row_reqs)
             for req in decode_reqs:
                 slot = self.slots[req.request_id]
-                tok = int(sampled[slot])
-                req.output.append(tok)
-                self.last_token[slot] = tok
+                self._emit(req, slot, int(sampled[slot]), float(lps[slot]))
 
         finished = self.scheduler.complete_iteration(plan, now)
         for req in finished:
-            self.free_slots.append(self.slots.pop(req.request_id))
+            if req.request_id in self.slots:
+                self.free_slots.append(self.slots.pop(req.request_id))
         self.iterations += 1
         return finished
 
-    def _sample(self, logits):
-        self.key, sub = jax.random.split(self.key)
-        return np.asarray(sampling.sample(
-            logits, sub, temperature=self.ecfg.temperature))
+    def _fork_children(self, parent: Request, logits, now) -> List[Request]:
+        """COW-fork best-of-n siblings off ``parent``'s fresh prefill: each
+        child shares the prompt pages (no second prefill) and samples its
+        own first token from the same last-position logits."""
+        children = self._pending_forks.pop(parent.request_id, [])
+        forked = []
+        for child in children:
+            if self.free_slots and \
+                    len(self.scheduler.running) < self.scheduler.max_running:
+                self.scheduler.fork_from(parent, child)
+                slot = self.free_slots.pop()
+                self.slots[child.request_id] = slot
+                child.scheduled_time = now
+                child.first_token_time = now
+                tok, lp = self._sample_one(child, logits)
+                self._emit(child, slot, tok, lp)
+                forked.append(child)
+            else:
+                # no slot free: fall back to an ordinary request (with the
+                # prefix cache on it still reuses the parent's prompt pages)
+                self.scheduler.add_request(child)
+        return forked
 
     def run_to_completion(self, max_iters: int = 10_000) -> None:
         for _ in range(max_iters):
             self.step()
-            if not (self.scheduler.waiting or self.scheduler.running):
+            if not self.has_work:
                 return
         raise RuntimeError("engine did not drain")
 

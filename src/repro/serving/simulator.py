@@ -212,63 +212,108 @@ def make_multi_turn_workload(n_sessions: int, n_turns: int, *, rate: float,
 # paged / iteration-level simulation (vLLM = paged; Orca variants = prealloc)
 # ---------------------------------------------------------------------------
 
+class SimBackend:
+    """Cost-model ServingBackend: the *real* scheduler / allocator / radix
+    tree driven on a virtual clock, with model execution replaced by the
+    :class:`CostModel` (paper §III.E). Drop-in peer of ``PagedEngine``
+    behind :class:`repro.serving.api.LLMService` — benchmarks choose the
+    backend by flag, not by import."""
+
+    def __init__(self, *, num_blocks: int = 7000, block_size: int = 16,
+                 max_running: int = 256, max_tokens_per_iter: int = 8192,
+                 prefix_cache: bool = False,
+                 max_preemptions: Optional[int] = None,
+                 cost: Optional[CostModel] = None):
+        self.cost = cost or CostModel()
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.prefix_cache = PrefixCache(self.allocator) if prefix_cache \
+            else None
+        self.scheduler = IterationScheduler(
+            self.allocator, max_running=max_running,
+            max_tokens_per_iter=max_tokens_per_iter,
+            prefix_cache=self.prefix_cache, max_preemptions=max_preemptions,
+            # sim outputs are placeholder ids — adopting them into the radix
+            # tree would cache meaningless pages
+            cache_generated=False)
+        self._now = 0.0
+        self.iterations = 0
+        self.preemptions = 0
+        self.peak_memory_frac = 0.0
+        self._utils: List[float] = []
+
+    # -- ServingBackend protocol ----------------------------------------------
+    def add_request(self, req: Request) -> None:
+        self.scheduler.add_request(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.waiting or self.scheduler.running)
+
+    def clock(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float) -> None:
+        """Fast-forward across an idle gap (next arrival)."""
+        self._now = max(self._now, t)
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        plan = self.scheduler.schedule()
+        if plan.empty:
+            return []
+        self.preemptions += len(plan.preempted)
+        sum_ctx = sum(r.context_len for r in plan.decode)
+        self._now += self.cost.iteration_time(plan.token_count(), sum_ctx)
+        # simulate generation: each scheduled request emits one token
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+            if r.first_token_time is None:
+                r.first_token_time = self._now
+            if r.scheduled_time is None:
+                r.scheduled_time = self._now
+        finished = self.scheduler.complete_iteration(plan, self._now)
+        self.iterations += 1
+        self.peak_memory_frac = max(
+            self.peak_memory_frac,
+            self.allocator.num_used / self.allocator.num_blocks)
+        tables = list(self.scheduler.tables.values())
+        if tables:
+            self._utils.append(self.allocator.utilization(tables))
+        return finished
+
+    @property
+    def kv_utilization(self) -> float:
+        return float(np.mean(self._utils)) if self._utils else 1.0
+
+
 def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    block_size: int = 16, max_running: int = 256,
                    max_tokens_per_iter: int = 8192,
                    prefix_cache: bool = False,
                    cost: Optional[CostModel] = None) -> SimResult:
-    """``prefix_cache``: attach a radix-tree prefix KV cache — admission
+    """Replay ``requests`` through :class:`SimBackend` behind the LLMService
+    front-end (one drive loop for engine and simulator alike).
+
+    ``prefix_cache``: attach a radix-tree prefix KV cache — admission
     charges only the uncached prompt suffix (requests need real token ids,
     e.g. from :func:`make_shared_prefix_workload`)."""
-    cost = cost or CostModel()
-    alloc = BlockAllocator(num_blocks, block_size)
-    pcache = PrefixCache(alloc) if prefix_cache else None
-    sched = IterationScheduler(alloc, max_running=max_running,
-                               max_tokens_per_iter=max_tokens_per_iter,
-                               prefix_cache=pcache)
-    res = _run_iteration_sim(requests, sched, alloc, cost)
-    if pcache is not None:
-        res.prefix_hit_rate = pcache.hit_rate
-        res.cached_pages = pcache.num_pages
+    from repro.serving.api import LLMService  # late: api imports Request
+
+    backend = SimBackend(num_blocks=num_blocks, block_size=block_size,
+                         max_running=max_running,
+                         max_tokens_per_iter=max_tokens_per_iter,
+                         prefix_cache=prefix_cache, cost=cost)
+    svc = LLMService(backend)
+    for r in sorted(requests, key=lambda r: r.arrival_time):
+        svc.submit_request(r)
+    svc.drain()
+    res = SimResult(list(requests), makespan=backend.clock(),
+                    peak_memory_frac=backend.peak_memory_frac,
+                    kv_utilization=backend.kv_utilization,
+                    preemptions=backend.preemptions)
+    if backend.prefix_cache is not None:
+        res.prefix_hit_rate = backend.prefix_cache.hit_rate
+        res.cached_pages = backend.prefix_cache.num_pages
     return res
-
-
-def _run_iteration_sim(requests, sched, alloc, cost) -> SimResult:
-    pending = sorted(requests, key=lambda r: r.arrival_time)
-    now = 0.0
-    i_pending = 0
-    peak_mem = 0.0
-    utils = []
-    preempt = 0
-    n_left = len(pending)
-    while n_left > 0:
-        while i_pending < len(pending) and \
-                pending[i_pending].arrival_time <= now:
-            sched.add_request(pending[i_pending])
-            i_pending += 1
-        plan = sched.schedule()
-        if plan.empty:
-            if i_pending < len(pending):
-                now = max(now, pending[i_pending].arrival_time)
-                continue
-            break
-        preempt += len(plan.preempted)
-        sum_ctx = sum(r.context_len for r in plan.decode)
-        now += cost.iteration_time(plan.token_count(), sum_ctx)
-        # simulate generation: each scheduled request emits one token
-        for r in plan.prefill + plan.decode:
-            r.output.append(0)
-            if r.first_token_time is None:
-                r.first_token_time = now
-        finished = sched.complete_iteration(plan, now)
-        n_left -= len(finished)
-        peak_mem = max(peak_mem, alloc.num_used / alloc.num_blocks)
-        tables = list(sched.tables.values())
-        if tables:
-            utils.append(alloc.utilization(tables))
-    return SimResult(list(requests), makespan=now, peak_memory_frac=peak_mem,
-                     kv_utilization=float(np.mean(utils)) if utils else 1.0,
-                     preemptions=preempt)
 
 
 def simulate_prealloc(requests: Sequence[Request], *, total_slots: int,

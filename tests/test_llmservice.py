@@ -1,0 +1,227 @@
+"""LLMService front-end: one API over the real engine and the simulator.
+
+Covers the PR's acceptance criteria: a single workload exercised on both
+backends through the ServingBackend protocol, and a batch mixing greedy and
+temperature/top-p requests with different stop tokens producing
+per-request-correct finish reasons and deterministic greedy outputs in one
+fused decode.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.scheduling.request import Request
+from repro.models import Model
+from repro.serving.api import (FINISH_DROPPED, FINISH_REASONS, LLMService,
+                               SamplingParams, ServingBackend)
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.simulator import SimBackend, make_workload
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _oracle(model, params, prompt, n):
+    tokens = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, tokens, seq_capacity=128)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    pos = len(prompt)
+    while len(out) < n:
+        lg, caches = model.decode_step(params, jnp.array([[tok]], jnp.int32),
+                                       jnp.array([pos], jnp.int32), caches)
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_slots", 4)
+    return PagedEngine(cfg, params, EngineConfig(**kw))
+
+
+def test_generate_blocking_matches_oracle(model_setup):
+    cfg, model, params = model_setup
+    svc = LLMService(_engine(cfg, params))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 10).tolist()
+               for _ in range(3)]
+    outs = svc.generate(prompts, SamplingParams(max_new_tokens=5))
+    for p, o in zip(prompts, outs):
+        assert o.token_ids == _oracle(model, params, p, 5)
+        assert o.finish_reason == "length"
+        assert o.metrics.ttft is not None and o.metrics.e2e is not None
+
+
+def test_mixed_batch_finish_reasons_fused_decode(model_setup):
+    """ACCEPTANCE: greedy + temperature/top-p requests with different stop
+    tokens in ONE fused decode — per-request-correct finish reasons and
+    deterministic greedy output."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 12).tolist()
+    # reference: the greedy request run ALONE on a fresh engine — the mixed
+    # batch must reproduce it exactly (sampled neighbors in the fused decode
+    # must not perturb a greedy slot)
+    greedy_out = LLMService(_engine(cfg, params)).generate(
+        [prompt], SamplingParams(max_new_tokens=6))[0].token_ids
+
+    def run():
+        svc = LLMService(_engine(cfg, params))
+        rids = [
+            svc.submit(prompt, SamplingParams(max_new_tokens=6)),
+            # greedy with a stop token at the oracle's 3rd token
+            svc.submit(prompt, SamplingParams(
+                max_new_tokens=6, stop_token_ids=(greedy_out[2],))),
+            svc.submit(prompt, SamplingParams(
+                max_new_tokens=6, temperature=0.9, top_p=0.9, seed=5,
+                stop_token_ids=(123456,))),  # never hit: out-of-vocab id
+            svc.submit(prompt, SamplingParams(
+                max_new_tokens=6, temperature=1.3, top_k=50, seed=6,
+                eos_token=None)),
+        ]
+        svc.drain()
+        return [svc._results[r] for r in rids]
+
+    outs = run()
+    assert outs[0].token_ids == greedy_out
+    assert outs[0].finish_reason == "length"
+    # stops at the FIRST occurrence of the stop token in the greedy stream
+    stop_at = greedy_out.index(greedy_out[2])
+    assert outs[1].token_ids == greedy_out[:stop_at + 1]
+    assert outs[1].finish_reason == "stop"
+    assert outs[2].finish_reason == "length"
+    assert outs[3].finish_reason == "length"
+    assert all(len(o.token_ids) <= 6 for o in outs)
+    # all four decoded in the same engine -> fused slots; rerun = identical
+    outs2 = run()
+    for a, b in zip(outs, outs2):
+        assert a.token_ids == b.token_ids and \
+            a.finish_reason == b.finish_reason
+
+
+def test_eos_vs_length_finish(model_setup):
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 9).tolist()
+    want = _oracle(model, params, prompt, 4)
+    svc = LLMService(_engine(cfg, params))
+    eos_out, len_out = svc.generate(
+        [prompt, prompt],
+        SamplingParams(max_new_tokens=8, eos_token=want[3]))
+    assert eos_out.token_ids == want[:4]
+    assert eos_out.finish_reason == "eos"
+    assert len_out.finish_reason == "eos"  # same greedy stream
+    svc2 = LLMService(_engine(cfg, params))
+    out = svc2.generate([prompt], SamplingParams(max_new_tokens=2))[0]
+    assert out.finish_reason == "length" and len(out.token_ids) == 2
+
+
+def test_stream_chunks_concatenate_to_output(model_setup):
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).tolist() for _ in range(2)]
+    svc = LLMService(_engine(cfg, params))
+    got = {0: [], 1: []}
+    reasons = {}
+    for ch in svc.stream(prompts, SamplingParams(max_new_tokens=4)):
+        got[ch.request_id].extend(ch.token_ids)
+        if ch.finished:
+            reasons[ch.request_id] = ch.finish_reason
+    for i, p in enumerate(prompts):
+        assert got[i] == _oracle(model, params, p, 4)
+        assert reasons[i] == "length"
+
+
+def test_best_of_n_cow_forks(model_setup):
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 11).tolist()
+    eng = _engine(cfg, params)
+    svc = LLMService(eng)
+    out = svc.generate([prompt], SamplingParams(
+        max_new_tokens=4, temperature=1.0, n=3, seed=11))[0]
+    assert len(out.samples) == 3
+    # samples ranked best-first by cumulative logprob; best mirrored at top
+    lps = [s.cumulative_logprob for s in out.samples]
+    assert lps == sorted(lps, reverse=True)
+    assert out.token_ids == out.samples[0].token_ids
+    assert out.cumulative_logprob == lps[0]
+    # distinct seeds -> (almost surely) distinct streams
+    assert len({tuple(s.token_ids) for s in out.samples}) > 1
+    # COW fork bookkeeping fully unwound: no leaked pages or refs
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    assert not eng.allocator.refcount
+
+
+def test_same_workload_on_both_backends():
+    """ACCEPTANCE: one workload, two ServingBackend implementations, one
+    service drive loop."""
+    cfg = smoke_config("h2o-danube-1.8b")
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def workload():
+        return make_workload(12, rate=50.0, seed=9, max_len=48,
+                             materialize_tokens=True,
+                             vocab=cfg.vocab_size)
+
+    for backend in (SimBackend(num_blocks=64, block_size=8, max_running=4),
+                    PagedEngine(cfg, params, EngineConfig(
+                        num_pages=64, page_size=8, max_slots=4,
+                        max_context_len=96))):
+        assert isinstance(backend, ServingBackend)
+        svc = LLMService(backend)
+        outs, stats = svc.replay(workload())
+        assert stats.n_finished == 12
+        for o in outs:
+            assert o is not None
+            assert o.finish_reason in FINISH_REASONS
+            assert 1 <= o.n_generated
+            assert o.metrics.ttft is not None
+
+
+def test_preempted_dropped_finish_reason():
+    """A request churning past the preemption budget is dropped and reported
+    as preempted-dropped, not recomputed forever."""
+    backend = SimBackend(num_blocks=12, block_size=8, max_running=8,
+                         max_preemptions=0)
+    svc = LLMService(backend)
+    reqs = [Request(i, 0.0, [], max_new_tokens=60, prompt_len=20)
+            for i in range(4)]
+    outs, stats = svc.replay(reqs)
+    reasons = {o.finish_reason for o in outs if o is not None}
+    assert FINISH_DROPPED in reasons
+    assert stats.n_dropped >= 1
+    # dropped requests still carry metrics and free their pages
+    assert backend.allocator.num_free == backend.allocator.num_blocks
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(n=0)
+    sp = SamplingParams(temperature=0.7, n=3, seed=4,
+                        stop_token_ids=[1, 2])
+    assert sp.stop_token_ids == (1, 2)
+    child = sp.for_sample(1)
+    assert child.n == 1 and child.seed != sp.seed

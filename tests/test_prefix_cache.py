@@ -414,6 +414,82 @@ def test_engine_swa_prefix_cache(model_setup):
     assert run(False) == run(True)
 
 
+# -- generated-token caching (multi-turn) --------------------------------------
+
+def test_scheduler_inserts_generated_tokens_at_finish():
+    """Finishing a request adopts its *generated* full pages too (KV exists
+    for all but the final sampled token), so a follow-up that resends the
+    reply as history hits past the prompt."""
+    a, c, s = _sched(max_tokens_per_iter=999)
+    r1 = Request(0, 0.0, list(range(PS * 2)), max_new_tokens=PS + 1)
+    s.add_request(r1)
+    it = 0.0
+    toks = iter(range(1000, 2000))
+    while r1.phase != Phase.FINISHED:
+        plan = s.schedule()
+        for r in plan.prefill + plan.decode:
+            r.output.append(next(toks))  # distinct "real" generated ids
+        s.complete_iteration(plan, it)
+        it += 1.0
+    # prompt pages (2) + one full generated page (PS of PS+1 tokens; the
+    # final sampled token has no KV and its page is partial)
+    assert c.num_pages == 3
+    history = r1.prompt + r1.output  # what a client resends next turn
+    r2 = Request(1, 0.0, history + [7, 8], max_new_tokens=2)
+    s.add_request(r2)
+    plan = s.schedule()
+    assert plan.prefill == [r2]
+    assert r2.num_cached_tokens == PS * 3, \
+        "multi-turn reuse must cover the generated reply, not just the prompt"
+
+
+def test_scheduler_cache_generated_opt_out():
+    """cache_generated=False (the simulator: outputs are placeholder ids)
+    keeps the old prompt-only insertion behavior."""
+    alloc = BlockAllocator(64, PS)
+    cache = PrefixCache(alloc)
+    s = IterationScheduler(alloc, prefix_cache=cache, cache_generated=False)
+    r1 = Request(0, 0.0, list(range(PS)), max_new_tokens=PS + 1)
+    _drain(s, r1)
+    assert cache.num_pages == 1  # prompt page only
+
+
+def test_engine_multi_turn_hits_generated_pages(model_setup):
+    """End-to-end multi-turn chat on the engine: turn 2 resends turn 1's
+    reply and must hit the radix tree beyond the client-resent prompt —
+    and produce identical outputs to a cold engine (pure optimization)."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(21)
+    system_user1 = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    user2 = rng.integers(0, cfg.vocab_size, 5).tolist()
+    n_reply = PS + 1  # KV exists for the first PS generated tokens
+
+    def turn2_prompt(reply):
+        return system_user1 + reply + user2
+
+    def run(enable):
+        eng = PagedEngine(cfg, params, EngineConfig(
+            num_pages=64, page_size=PS, max_slots=2,
+            enable_prefix_cache=enable))
+        r1 = Request(0, 0.0, list(system_user1), max_new_tokens=n_reply)
+        eng.add_request(r1)
+        eng.run_to_completion()
+        r2 = Request(1, 0.0, turn2_prompt(r1.full_output), max_new_tokens=4)
+        eng.add_request(r2)
+        eng.run_to_completion()
+        return r1, r2
+
+    r1c, r2c = run(False)
+    r1w, r2w = run(True)
+    assert r1c.full_output == r1w.full_output
+    assert r2c.full_output == r2w.full_output, \
+        "generated-page reuse must not change the decode"
+    # turn-2 hit covers prompt pages AND the first generated page: the
+    # resent history is 2*PS prompt + PS+1 reply tokens -> 3 full pages
+    assert r2w.num_cached_tokens == 3 * PS
+    assert r2c.num_cached_tokens == 0
+
+
 # -- block-table sizing (satellite) --------------------------------------------
 
 def test_block_table_width_from_context_limit(model_setup):
