@@ -17,6 +17,7 @@ def main() -> None:
     import benchmarks.serving_fig10 as serving_fig10
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
+    import benchmarks.router_sweep as router_sweep
 
     csv_rows = []
 
@@ -52,6 +53,10 @@ def main() -> None:
           lambda: prefix_cache_sweep.run(n_requests=150),
           lambda out: "shared_speedup=%.3fx,hit=%.0f%%" % (
               out[0]["speedup"], 100 * out[0]["hit_rate"]))
+
+    bench("router_sweep (cluster placement policies)",
+          lambda: router_sweep.run(n_requests=160),
+          router_sweep.headline)
 
     bench("orca_iteration_vs_batch",
           orca_scheduling.run,

@@ -77,6 +77,11 @@ class ArchConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
+    # compute the unembedding in float32. bf16 logits round near-ties onto
+    # the same value, so greedy argmax can legitimately differ between two
+    # correct implementations; fp32 logits make greedy decoding comparable
+    # across engine/oracle (see tests/test_engine.py).
+    logits_fp32: bool = False
 
     # ------------------------------------------------------------------------
     @property

@@ -1,4 +1,6 @@
 from repro.core.distkv.gmanager import GManager, Heartbeat, DebtEntry  # noqa: F401
+from repro.core.distkv.prefixshare import (  # noqa: F401
+    PrefixShareBoard, PublishedPage)
 from repro.core.distkv.rmanager import RManager, RBlock, SeqKV  # noqa: F401
 from repro.core.distkv.dist_attention import (  # noqa: F401
     dist_attention, dist_attention_ref, micro_attention_partial,

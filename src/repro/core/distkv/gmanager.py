@@ -6,12 +6,19 @@ creditor recommendations for a debtor instance. Selection follows the paper:
 locality (ring distance between instances, a stand-in for datacenter
 topology), availability, and communication cost — the top-3 candidates are
 proposed and the debtor tries them in order.
+
+The gManager also hosts the cluster's **prefix publication board**
+(``prefixshare.PrefixShareBoard``): instances publish hot radix paths (token
+keys + page payloads) through it, and peers adopt them into their own radix
+trees — the cross-instance half of prefix caching.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
+
+from repro.core.distkv.prefixshare import PrefixShareBoard
 
 
 @dataclasses.dataclass
@@ -35,6 +42,8 @@ class GManager:
         self.total: Dict[int, int] = {i: 0 for i in range(num_instances)}
         self.ledger: List[DebtEntry] = []
         self.safety_free = safety_free  # blocks a creditor must keep local
+        # cross-instance prefix sharing: published hot radix paths
+        self.prefix_board = PrefixShareBoard()
 
     # -- heartbeats -----------------------------------------------------------
     def heartbeat(self, hb: Heartbeat) -> None:

@@ -1,0 +1,129 @@
+"""Cross-instance prefix publication board (InfiniteLLM-style cluster KV).
+
+The radix prefix cache (``core.prefixcache``) shares KV pages *within* one
+LLM service instance. Under a multi-instance router the same hot system
+prompt is otherwise recomputed once per instance; this module is the piece
+of the distkv layer that closes that gap:
+
+* an instance whose radix tree crosses a hit-count threshold on a path
+  exports ``(token keys, page payloads)`` for that path
+  (:meth:`PrefixCache.take_hot_paths`) and **publishes** it here, through
+  its gManager (the publication board is global-coordinator state, like the
+  debt ledger);
+* a peer instance, at admission time, asks the board for the longest
+  published extension of its own local radix match and **adopts** those
+  pages into its own tree (:meth:`PrefixCache.adopt`) — fresh local blocks
+  filled from the published payloads, so the shared prefix is computed once
+  cluster-wide.
+
+Payloads are opaque to the board: the real engine publishes the per-layer
+K/V page contents (host numpy, one copy per page), the cost-model simulator
+publishes ``None``. The board mirrors the radix tree's shape — one node per
+page, keyed by the page's token tuple — so lookup is the same page-aligned
+walk. This is the *copy* flavor of cross-instance sharing; serving the
+prefix remotely via borrowed rBlocks + DistAttention partial merges (no
+copy, per-token remote penalty) is the recorded alternative.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class PublishedPage:
+    """One published page: token key, opaque KV payload, home instance."""
+    key: Tuple[int, ...]
+    payload: Any
+    home: int
+    children: Dict[Tuple[int, ...], "PublishedPage"] = \
+        dataclasses.field(default_factory=dict)
+
+
+class PrefixShareBoard:
+    """Global radix of published pages. Lives on the gManager."""
+
+    def __init__(self):
+        self._root = PublishedPage(key=(), payload=None, home=-1)
+        self.page_size: Optional[int] = None
+        # stats
+        self.published_pages = 0
+        self.publications = 0
+        self.lookups = 0
+        self.hit_pages = 0
+
+    def publish(self, instance_id: int, tokens: Sequence[int],
+                payloads: Sequence[Any], page_size: int) -> int:
+        """Publish a page-aligned path: page ``i`` holds
+        ``tokens[i*ps:(i+1)*ps]`` with KV contents ``payloads[i]``.
+        Pages already on the board are kept (first publisher wins — the
+        payloads are equivalent by construction). Returns #pages added."""
+        if self.page_size is None:
+            self.page_size = page_size
+        elif self.page_size != page_size:
+            raise ValueError(
+                f"mixed page sizes on one board: {self.page_size} vs "
+                f"{page_size} — cross-instance pages must be interchangeable")
+        node, new = self._root, 0
+        for i in range(len(tokens) // page_size):
+            key = tuple(tokens[i * page_size:(i + 1) * page_size])
+            child = node.children.get(key)
+            if child is None:
+                child = PublishedPage(key=key, payload=payloads[i],
+                                      home=instance_id)
+                node.children[key] = child
+                new += 1
+            elif child.payload is None and payloads[i] is not None:
+                # a bookkeeping-only publication (sim) upgraded with real
+                # page contents: engine adopters can now use the page
+                child.payload = payloads[i]
+                child.home = instance_id
+            node = child
+        self.published_pages += new
+        self.publications += 1
+        return new
+
+    def covered(self, tokens: Sequence[int]) -> int:
+        """#leading pages of ``tokens`` already on the board *with a
+        payload* (stat-free). Publishers skip exporting those — payload
+        export is a device->host page copy on engines — but still supply
+        payloads for payload-less pages so a bookkeeping-only (sim)
+        publication gets upgraded."""
+        if self.page_size is None:
+            return 0
+        ps = self.page_size
+        node, n = self._root, 0
+        for i in range(len(tokens) // ps):
+            node = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if node is None or node.payload is None:
+                break
+            n += 1
+        return n
+
+    def match(self, tokens: Sequence[int], *,
+              max_tokens: Optional[int] = None) -> List[PublishedPage]:
+        """Longest published page chain prefixing ``tokens`` (may be empty)."""
+        if self.page_size is None:
+            return []
+        ps = self.page_size
+        limit = len(tokens) if max_tokens is None else \
+            min(max_tokens, len(tokens))
+        node, path = self._root, []
+        for i in range(limit // ps):
+            child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        self.lookups += 1
+        self.hit_pages += len(path)
+        return path
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "published_pages": self.published_pages,
+            "publications": self.publications,
+            "lookups": self.lookups,
+            "hit_pages": self.hit_pages,
+        }

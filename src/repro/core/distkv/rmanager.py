@@ -123,6 +123,19 @@ class RManager:
                 self.repay(rb.device_id, rb.physical_id)
         self.heartbeat()
 
+    # -- cross-instance prefix sharing -------------------------------------------
+    def publish_prefix(self, tokens, payloads) -> int:
+        """Publish a hot page-aligned prefix (token keys + page payloads)
+        computed on this instance to the cluster's board (on the gManager,
+        like the debt ledger). Peers adopt via :meth:`lookup_prefix` +
+        ``PrefixCache.adopt``."""
+        return self.g.prefix_board.publish(self.instance_id, tokens, payloads,
+                                           self.allocator.block_size)
+
+    def lookup_prefix(self, tokens, max_tokens=None):
+        """Longest published page chain for ``tokens`` (any home instance)."""
+        return self.g.prefix_board.match(tokens, max_tokens=max_tokens)
+
     # -- stats ------------------------------------------------------------------
     def remote_fraction(self, seq_id: int) -> float:
         kv = self.seqs.get(seq_id)

@@ -47,10 +47,13 @@ because the paged engine can only reuse whole physical blocks — a partial
 page would need a COW copy plus a partial recompute for no FLOP savings on
 the remainder. The trade is at most ``page_size - 1`` tokens of lost hit per
 request, in exchange for no node splitting and a 1:1 node/block mapping.
-Generated (decode) tokens are not inserted — only prompt pages — so
-multi-turn reuse covers the accumulated history as resent by the client, not
-the model's own reply; caching replies is a recorded ROADMAP follow-up, as is
-cross-instance prefix sharing over distkv.
+Cross-instance sharing. Every node carries a **hit counter** (bumped once
+per *committed* admission that reuses the node — neither routing-policy
+``probe`` lookups nor failed admission retries count). A serving router can ask for the *hot* root paths
+(:meth:`take_hot_paths`) to publish their token keys + page payloads through
+the distkv layer, and a peer instance adopts a published path into its own
+tree with :meth:`adopt` — fresh local blocks, tree-owned, so the peer serves
+the shared system prompt without ever computing it.
 
 The LRU clock is a logical counter (no wall time), keeping the simulator
 deterministic.
@@ -61,7 +64,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.paging.allocator import BlockAllocator
+from repro.core.paging.allocator import BlockAllocator, OutOfBlocks
 
 
 @dataclasses.dataclass
@@ -74,6 +77,9 @@ class RadixNode:
         dataclasses.field(default_factory=dict)
     last_access: int = 0
     pin_count: int = 0  # running requests currently holding this node
+    hit_count: int = 0  # committed admissions that reused this node
+    published: bool = False  # already exported for cross-instance sharing
+    pending_hot: bool = False  # queued in _recent_hits awaiting publication
 
 
 class PrefixCache:
@@ -90,26 +96,42 @@ class PrefixCache:
         self.admissions = 0
         self.inserted_pages = 0
         self.evicted_pages = 0
+        self.adopted_pages = 0  # pages imported from a peer's publication
+        # hot-path publication plumbing, enabled by a cluster router
+        # (track_hot=True). Off by default: a single-instance cache must not
+        # accumulate node references nobody will ever drain.
+        self.track_hot = False
+        # nodes whose hit_count moved since the last take_hot_paths drain:
+        # publication scans O(recently-hit) nodes, never the whole tree
+        self._recent_hits: List[RadixNode] = []
 
     # -- lookup -----------------------------------------------------------------
     def match(self, tokens: Sequence[int], *,
-              max_tokens: Optional[int] = None) -> List[RadixNode]:
+              max_tokens: Optional[int] = None,
+              probe: bool = False) -> List[RadixNode]:
         """Longest page-aligned cached prefix of ``tokens``.
 
         Returns the matched node path (root excluded; may be empty). Pure
-        lookup apart from LRU touching — callers commit with :meth:`lock`.
-        ``max_tokens`` caps the match (admission passes ``prompt_len - 1`` so
-        a fully-cached prompt still prefills its last token for logits)."""
+        lookup apart from LRU touching — callers commit with :meth:`lock`,
+        and hit counters (which drive cross-instance publication) are only
+        bumped by :meth:`record_admission` on a *committed* admission, so a
+        request retrying admission under memory pressure cannot inflate
+        them. ``max_tokens`` caps the match (admission passes
+        ``prompt_len - 1`` so a fully-cached prompt still prefills its last
+        token for logits). ``probe=True`` is fully side-effect-free for
+        routing policies probing every instance."""
         ps = self.page_size
         limit = len(tokens) if max_tokens is None else \
             min(max_tokens, len(tokens))
         node, path = self.root, []
-        self._clock += 1
+        if not probe:
+            self._clock += 1
         for i in range(limit // ps):
             child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
             if child is None:
                 break
-            child.last_access = self._clock
+            if not probe:
+                child.last_access = self._clock
             path.append(child)
             node = child
         return path
@@ -151,6 +173,70 @@ class PrefixCache:
         self.inserted_pages += new
         return new
 
+    # -- cross-instance sharing ---------------------------------------------------
+    def take_hot_paths(self, threshold: int
+                       ) -> List[Tuple[Tuple[int, ...], List[int]]]:
+        """Root paths ending at *hot* nodes (``hit_count >= threshold``) not
+        yet published. Each entry is ``(token_prefix, blocks)`` — the full
+        token key of the path and the physical page per node — ready to be
+        shipped (with page payloads) to the distkv publication board. Nodes
+        are marked ``published`` so a path is exported once; the union of
+        exported paths is the tree's hot subtree.
+
+        Cost is O(recently-hit nodes), not O(tree): ``record_admission``
+        queues the nodes it bumps and this drains the queue (nodes still
+        under the threshold re-queue on their next hit)."""
+        out = []
+        for node in self._recent_hits:
+            node.pending_hot = False
+            if node.hit_count < threshold or node.published or \
+                    node.parent is None:  # parent None = evicted meanwhile
+                continue
+            node.published = True
+            toks: List[int] = []
+            blocks: List[int] = []
+            walk = node
+            while walk.parent is not None:  # ancestors of a live node live
+                toks[:0] = walk.key
+                blocks.insert(0, walk.block)
+                walk = walk.parent
+            out.append((tuple(toks), blocks))
+        self._recent_hits.clear()
+        return out
+
+    def adopt(self, tokens: Sequence[int]) -> List[Tuple[int, int]]:
+        """Adopt a *published* page chain computed on another instance:
+        allocate one fresh local block per page of ``tokens`` not already
+        cached and graft the nodes into the tree (tree-owned, refcount 1).
+
+        Returns ``(page_index, block)`` for every newly adopted page — the
+        caller must materialize the page payloads (KV contents) into those
+        blocks before any request reads them. Adoption is best-effort: it
+        stops at the first page the allocator cannot supply (the leading
+        pages alone are still a valid prefix). Imported nodes keep
+        ``published=True`` so an adopter never re-publishes a prefix it did
+        not compute."""
+        ps = self.page_size
+        node, adopted = self.root, []
+        self._clock += 1
+        for i in range(len(tokens) // ps):
+            key = tuple(tokens[i * ps:(i + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                try:
+                    block = self.allocator.alloc_block()
+                except OutOfBlocks:  # keep the prefix adopted so far
+                    break
+                child = RadixNode(key=key, block=block, parent=node,
+                                  published=True)
+                node.children[key] = child
+                self.num_pages += 1
+                adopted.append((i, block))
+            child.last_access = self._clock
+            node = child
+        self.adopted_pages += len(adopted)
+        return adopted
+
     # -- eviction -----------------------------------------------------------------
     def evict(self, n_blocks: int) -> int:
         """Return >= ``n_blocks`` pages to the allocator's free list by
@@ -171,6 +257,7 @@ class PrefixCache:
                 self.allocator.decref(leaf.block)
                 freed += self.allocator.num_free - before
                 del leaf.parent.children[leaf.key]
+                leaf.parent = None  # take_hot_paths skips evicted nodes
                 self.num_pages -= 1
                 self.evicted_pages += 1
                 progress = True
@@ -196,10 +283,20 @@ class PrefixCache:
         return self.evict(self.num_pages)
 
     # -- stats --------------------------------------------------------------------
-    def record_admission(self, prompt_tokens: int, hit_tokens: int) -> None:
+    def record_admission(self, prompt_tokens: int, hit_tokens: int,
+                         path: Sequence[RadixNode] = ()) -> None:
+        """Called once per *committed* admission. ``path`` is the locked
+        node chain the request reuses; its hit counters feed hot-path
+        publication (one bump per serving request, never per retry)."""
         self.admissions += 1
         self.lookup_tokens += prompt_tokens
         self.hit_tokens += hit_tokens
+        for node in path:
+            node.hit_count += 1
+            if self.track_hot and not node.published \
+                    and not node.pending_hot:
+                node.pending_hot = True
+                self._recent_hits.append(node)
 
     @property
     def hit_rate(self) -> float:
@@ -220,4 +317,5 @@ class PrefixCache:
             "cached_pages": self.num_pages,
             "inserted_pages": self.inserted_pages,
             "evicted_pages": self.evicted_pages,
+            "adopted_pages": self.adopted_pages,
         }

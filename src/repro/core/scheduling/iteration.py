@@ -21,12 +21,18 @@ request's block table (refcounted, no recompute) and only the *uncached
 suffix* is charged against the token budget; prompt pages are inserted into
 the tree as soon as prefill completes (and survive the request), and under
 page pressure LRU cache eviction runs before any preemption.
+
+``prefix_importer`` extends the match across instances: before committing
+to a local match, admission offers the prompt to the importer (wired by a
+cluster router to the distkv publication board), which may *adopt* pages a
+peer instance published into the local tree — the admission then re-matches
+and prefills only the suffix past the imported prefix.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.paging.allocator import BlockAllocator, BlockTable
 from repro.core.prefixcache.radix import PrefixCache
@@ -60,7 +66,9 @@ class IterationScheduler:
                  watermark: float = 0.01,
                  prefix_cache: Optional[PrefixCache] = None,
                  max_preemptions: Optional[int] = None,
-                 cache_generated: bool = True):
+                 cache_generated: bool = True,
+                 prefix_importer: Optional[
+                     Callable[[Sequence[int], int], int]] = None):
         self.allocator = allocator
         self.max_running = max_running
         self.max_tokens = max_tokens_per_iter
@@ -73,6 +81,10 @@ class IterationScheduler:
         # multi-turn follow-up resending the assistant reply hits the cache
         # beyond the prompt. Disable when outputs are placeholder ids (sim).
         self.cache_generated = cache_generated
+        # cross-instance sharing hook: (prompt, locally_cached_tokens) ->
+        # #pages adopted from a peer's publication into the local tree.
+        # Admission re-matches after a successful import.
+        self.prefix_importer = prefix_importer
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
@@ -166,6 +178,14 @@ class IterationScheduler:
                 # for the first-token logits even if fully cached
                 path = self.prefix_cache.match(req.prompt,
                                                max_tokens=req.prompt_len - 1)
+                if self.prefix_importer is not None and self.prefix_importer(
+                        req.prompt,
+                        len(path) * self.allocator.block_size) > 0:
+                    # adopt-imported-pages path: a peer published pages
+                    # extending our local match and they were just grafted
+                    # into the local tree — re-match over them
+                    path = self.prefix_cache.match(
+                        req.prompt, max_tokens=req.prompt_len - 1)
                 cached = len(path) * self.allocator.block_size
             need_tokens = req.prompt_len - cached
             if need_tokens > budget:
@@ -200,7 +220,8 @@ class IterationScheduler:
                 self._cache_paths[req.request_id] = path
             req.num_cached_tokens = cached
             if self.prefix_cache is not None:
-                self.prefix_cache.record_admission(req.prompt_len, cached)
+                self.prefix_cache.record_admission(req.prompt_len, cached,
+                                                   path)
             req.phase = Phase.INITIATION
             self.running.append(req)
             prefill.append(req)

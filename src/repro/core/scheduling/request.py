@@ -46,6 +46,9 @@ class Request:
     # prompt tokens served from the radix prefix cache at the current
     # admission (page-aligned; the engine prefills only the remainder)
     num_cached_tokens: int = 0
+    # serving instance this request was placed on (set by RouterBackend;
+    # None under a single-backend service)
+    instance_id: Optional[int] = None
 
     def __post_init__(self):
         if self.prompt_len is None:

@@ -1,10 +1,14 @@
 """Serving launcher: the LLMService front-end over either backend — the real
 continuous-batching engine (wall-clock) or the cost-model simulator (virtual
-clock) — with a synthetic open-loop request stream.
+clock) — with a synthetic open-loop request stream. ``--instances N`` puts a
+cluster RouterBackend in front of N instances (placement via ``--policy``,
+cross-instance prefix sharing via ``--prefix-share``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --reduced --requests 16 --rate 4
   PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 400 \
+      --instances 4 --policy prefix_affinity --prefix-cache --prefix-share
 """
 
 from __future__ import annotations
@@ -18,7 +22,7 @@ from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.serving.api import LLMService, SamplingParams
 
 
-def build_backend(args):
+def build_instance(args):
     if args.backend == "sim":
         from repro.serving.simulator import SimBackend
         return SimBackend(num_blocks=args.pages, block_size=args.page_size,
@@ -34,6 +38,20 @@ def build_backend(args):
         num_pages=args.pages, page_size=args.page_size,
         max_slots=args.slots, use_kernel=args.use_kernel,
         enable_prefix_cache=args.prefix_cache))
+
+
+def build_backend(args):
+    if args.prefix_share and not args.prefix_cache:
+        raise SystemExit("--prefix-share requires --prefix-cache")
+    if args.prefix_share and args.instances <= 1:
+        raise SystemExit("--prefix-share requires --instances >= 2 "
+                         "(there is no peer to share with)")
+    if args.instances <= 1:
+        return build_instance(args)
+    from repro.serving.router import RouterBackend
+    children = [build_instance(args) for _ in range(args.instances)]
+    return RouterBackend(children, policy=args.policy,
+                         prefix_share=args.prefix_share)
 
 
 def main():
@@ -58,11 +76,24 @@ def main():
                     help="Pallas paged-attention (interpret mode on CPU)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree prefix KV cache (cross-request reuse)")
+    ap.add_argument("--instances", type=int, default=1,
+                    help="serving instances behind the cluster router "
+                         "(1 = no router)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=("round_robin", "least_loaded",
+                             "prefix_affinity"),
+                    help="router placement policy")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="publish hot radix paths through the distkv board "
+                         "so instances adopt each other's cached prefixes "
+                         "(needs --prefix-cache)")
     args = ap.parse_args()
 
     backend = build_backend(args)
     svc = LLMService(backend)
-    vocab = 32_000 if args.backend == "sim" else backend.cfg.vocab_size
+    instance = backend.children[0] if hasattr(backend, "children") \
+        else backend
+    vocab = 32_000 if args.backend == "sim" else instance.cfg.vocab_size
 
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
@@ -98,6 +129,14 @@ def main():
           f"mean norm-lat {stats.mean_normalized_latency:.3f}s/tok")
     if stats.prefix_hit_rate is not None:
         print(f"prefix-cache hit-rate {stats.prefix_hit_rate:.1%}")
+    if stats.per_instance:
+        for i, row in sorted(stats.per_instance.items()):
+            extra = ""
+            if "prefix_hit_rate" in row:
+                extra = (f", hit {row['prefix_hit_rate']:.1%}, "
+                         f"{row['adopted_pages']} adopted pages")
+            print(f"  instance {i}: {row['requests']} reqs, "
+                  f"{row['iterations']} iters{extra}")
 
 
 if __name__ == "__main__":

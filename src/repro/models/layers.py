@@ -138,8 +138,16 @@ def embed(p, tokens, policy: ShardingPolicy = NO_POLICY):
     return policy.act(jnp.take(p["table"], tokens, axis=0), "act_bsd")
 
 
-def unembed(p, x, vocab: int, policy: ShardingPolicy = NO_POLICY):
-    logits = x @ p["table"].T
+def unembed(p, x, vocab: int, policy: ShardingPolicy = NO_POLICY,
+            fp32: bool = False):
+    """Project hidden states to vocab logits. ``fp32`` computes the
+    projection in float32: bf16 logits round near-equal candidates onto the
+    same value, so greedy argmax between two implementations can diverge on
+    the tie-break even when both are correct (ArchConfig.logits_fp32)."""
+    if fp32:
+        logits = x.astype(jnp.float32) @ p["table"].T.astype(jnp.float32)
+    else:
+        logits = x @ p["table"].T
     logits = policy.act(logits, "logits_bsv")
     # mask padded vocab entries so they never win a softmax/argmax
     v_pad = p["table"].shape[0]

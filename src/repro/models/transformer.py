@@ -380,7 +380,8 @@ class Model:
         x, aux, _ = self._run_stack(self.plan, params["segments"], x,
                                     positions, policy=policy, enc_out=enc_out)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x, cfg.vocab_size, policy)
+        logits = unembed(params["embed"], x, cfg.vocab_size, policy,
+                         fp32=cfg.logits_fp32)
         return logits, aux
 
     def loss(self, params, batch, *, policy: ShardingPolicy = NO_POLICY):
@@ -425,7 +426,7 @@ class Model:
             last_idx = jnp.full((b,), s - 1, jnp.int32)
         last_h = x[jnp.arange(b), last_idx]
         logits = unembed(params["embed"], last_h[:, None, :], cfg.vocab_size,
-                         policy)
+                         policy, fp32=cfg.logits_fp32)
         if return_raw_kv:
             return logits[:, 0], seeds
         caches = self._seed_caches(seeds, b, s, seq_capacity)
@@ -502,7 +503,8 @@ class Model:
                             unroll=self._unroll(seg.n))
             new_caches.append(c)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x, cfg.vocab_size, policy)
+        logits = unembed(params["embed"], x, cfg.vocab_size, policy,
+                         fp32=cfg.logits_fp32)
         return logits[:, 0], new_caches
 
 

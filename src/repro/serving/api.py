@@ -18,7 +18,11 @@ modeled on vLLM's ``LLM`` / ``SamplingParams`` split:
 Both backends implement the same :class:`ServingBackend` protocol: the real
 ``PagedEngine`` (wall-clock or caller-supplied time) and the cost-model
 ``SimBackend`` (virtual clock) from ``repro.serving.simulator``. Benchmarks
-and examples pick a backend by flag, not by import.
+and examples pick a backend by flag, not by import. A whole cluster is also
+just a backend: ``repro.serving.router.RouterBackend`` multiplexes N child
+instances behind this protocol (placement policies + cross-instance prefix
+sharing), reporting per-request placement via ``RequestMetrics.instance_id``
+and per-instance aggregates via ``ServiceStats.per_instance``.
 """
 
 from __future__ import annotations
@@ -102,6 +106,9 @@ class RequestMetrics:
     normalized_latency: Optional[float]  # e2e / output tokens (Fig. 9 metric)
     preemptions: int = 0
     num_cached_tokens: int = 0     # prompt tokens served from the radix cache
+    # serving instance the request ran on (RouterBackend placement; None
+    # under a single-backend service)
+    instance_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -169,6 +176,9 @@ class ServiceStats:
     throughput_tokens_per_s: float = 0.0
     preemptions: int = 0
     prefix_hit_rate: Optional[float] = None
+    # RouterBackend services: per-instance breakdown (requests placed,
+    # iterations, load, cache stats), keyed by instance id
+    per_instance: Optional[Dict[int, Dict]] = None
 
     @property
     def completed_frac(self) -> float:
@@ -449,6 +459,9 @@ class LLMService:
         pc = getattr(self.backend, "prefix_cache", None)
         if pc is not None:
             s.prefix_hit_rate = pc.hit_rate
+        inst = getattr(self.backend, "instance_stats", None)
+        if inst is not None:
+            s.per_instance = inst()
         return s
 
 
@@ -468,4 +481,5 @@ def _metrics_of(req: Request) -> RequestMetrics:
         arrival_time=req.arrival_time, queue_time=queue, ttft=ttft, tbt=tbt,
         e2e=e2e, normalized_latency=req.normalized_latency(),
         preemptions=req.preemptions,
-        num_cached_tokens=req.num_cached_tokens)
+        num_cached_tokens=req.num_cached_tokens,
+        instance_id=req.instance_id)

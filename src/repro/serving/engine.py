@@ -126,6 +126,7 @@ class PagedEngine:
         self.free_slots = list(range(ecfg.max_slots - 1, -1, -1))
         self.last_token = np.zeros(ecfg.max_slots, np.int32)
         self.iterations = 0
+        self.preemptions = 0
         # requests submitted without sampling params fall back to the
         # (deprecated) engine-global temperature, greedy by default
         self._default_sp = SamplingParams(temperature=ecfg.temperature)
@@ -208,7 +209,8 @@ class PagedEngine:
         (x,), (k_pages, v_pages) = jax.lax.scan(
             layer, (x,), (p_seg, k_pages, v_pages))
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x[:, -1:], cfg.vocab_size)
+        logits = unembed(params["embed"], x[:, -1:], cfg.vocab_size,
+                         fp32=cfg.logits_fp32)
         return logits[0, 0], k_pages, v_pages
 
     @partial(jax.jit, static_argnums=(0,))
@@ -255,7 +257,8 @@ class PagedEngine:
         (x,), (k_pages, v_pages) = jax.lax.scan(
             layer, (x,), (p_seg, k_pages, v_pages))
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x, cfg.vocab_size)[:, 0]
+        logits = unembed(params["embed"], x, cfg.vocab_size,
+                         fp32=cfg.logits_fp32)[:, 0]
         return logits, k_pages, v_pages
 
     # -- ServingBackend protocol -------------------------------------------------
@@ -343,8 +346,17 @@ class PagedEngine:
         """Run ONE iteration (ORCA's unit of scheduling)."""
         now = time.monotonic() if now is None else now
         plan = self.scheduler.schedule()
+        # release slots of preempted requests
+        self.preemptions += len(plan.preempted)
+        for req in plan.preempted:
+            if req.request_id in self.slots:
+                self.free_slots.append(self.slots.pop(req.request_id))
         if plan.empty:
-            return []
+            # a self-preempted request can leave an otherwise-empty plan:
+            # run completion anyway so the max_preemptions drop policy
+            # applies (otherwise it bounces in waiting forever)
+            return self.scheduler.complete_iteration(plan, now) \
+                if plan.preempted else []
         # COW: copy replaced shared pages before anything writes this
         # iteration (the old block keeps its pre-iteration contents until
         # the decode/prefill writes below)
@@ -353,10 +365,6 @@ class PagedEngine:
             new = jnp.asarray([w for _, w in plan.cow], jnp.int32)
             self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
             self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
-        # release slots of preempted requests
-        for req in plan.preempted:
-            if req.request_id in self.slots:
-                self.free_slots.append(self.slots.pop(req.request_id))
 
         # --- prefills (initiation phase) ---
         forked: List[Request] = []
@@ -443,6 +451,31 @@ class PagedEngine:
                 # prefix cache on it still reuses the parent's prompt pages)
                 self.scheduler.add_request(child)
         return forked
+
+    # -- cross-instance prefix sharing -------------------------------------------
+
+    def export_page_payload(self, block: int):
+        """KV contents of one physical page as host arrays — the payload a
+        cluster router publishes to the distkv board so a peer engine (same
+        arch + params) can adopt the page without recomputing it."""
+        return (np.asarray(self.k_pages[:, block]),
+                np.asarray(self.v_pages[:, block]))
+
+    def import_page_payloads(self, blocks, payloads) -> None:
+        """Materialize published pages into freshly adopted local blocks
+        (counterpart of :meth:`export_page_payload`). Batched: one update
+        per KV pool regardless of page count — ``.at[].set`` outside jit
+        copies the whole pool, so per-page calls would copy it 2x per page
+        (same batching the COW path in :meth:`step` uses)."""
+        if not blocks:
+            return
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        k = jnp.stack([jnp.asarray(p[0], self.k_pages.dtype)
+                       for p in payloads], axis=1)  # (L, n, ps, Hkv, Dh)
+        v = jnp.stack([jnp.asarray(p[1], self.v_pages.dtype)
+                       for p in payloads], axis=1)
+        self.k_pages = self.k_pages.at[:, idx].set(k)
+        self.v_pages = self.v_pages.at[:, idx].set(v)
 
     def run_to_completion(self, max_iters: int = 10_000) -> None:
         for _ in range(max_iters):

@@ -1,0 +1,379 @@
+"""Multi-instance cluster router: one ServingBackend over N serving instances.
+
+The paper's serving endgame (InfiniteLLM-style cluster serving) is many LLM
+service instances behind one front door. :class:`RouterBackend` is that
+front door as a *backend*: it implements the same ``ServingBackend``
+protocol as ``PagedEngine`` and ``SimBackend``, over N child backends
+(engine or sim, mixable), so ``LLMService`` and every benchmark drive a
+whole cluster exactly like a single instance.
+
+Placement is pluggable (``POLICIES``):
+
+* ``round_robin``     — cycle through instances (the classic baseline);
+* ``least_loaded``    — fewest queued+running requests, ties broken by most
+  free KV pages (a stand-in for the load heartbeats a real gManager
+  aggregates);
+* ``prefix_affinity`` — probe every instance's radix tree for the longest
+  cached match of the prompt and route to the best one (SGLang-style
+  cache-aware routing); below a match threshold fall back to least-loaded
+  so cold traffic still spreads.
+
+Cross-instance prefix sharing (``prefix_share=True``) layers the distkv
+publication board underneath placement: after each step the router exports
+any radix path whose hit count crossed ``hot_threshold`` from its owning
+instance — token keys + page payloads — and publishes it through the
+cluster's :class:`~repro.core.distkv.gmanager.GManager`. Each child
+scheduler gets a ``prefix_importer`` hook, so at admission an instance that
+only partially matches a prompt locally adopts the published extension into
+its *own* radix tree (fresh local blocks, payloads copied in) instead of
+recomputing the shared system prompt. A hot prefix is therefore computed
+once cluster-wide and then served everywhere, even under round-robin
+placement.
+
+Clock semantics: with all-virtual children (SimBackend) the router is
+event-driven — each ``step`` advances the laggard instance, and ``clock()``
+reports the cluster frontier, so policy sweeps over many instances run in
+milliseconds. With any wall-clock child, ``step`` fans out to every
+instance with work and ``clock()`` stays ``None`` (caller time), matching
+the single-engine contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.distkv.gmanager import GManager, Heartbeat
+from repro.core.scheduling.request import Request
+
+
+def _load_of(child) -> int:
+    """Queued + running requests on a child backend."""
+    sched = child.scheduler
+    return len(sched.waiting) + len(sched.running)
+
+
+def _free_pages_of(child) -> int:
+    return child.allocator.num_free
+
+
+class RoundRobinPolicy:
+    """Cycle through instances in submission order."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, req: Request, children: Sequence) -> int:
+        i = self._next % len(children)
+        self._next += 1
+        return i
+
+
+class LeastLoadedPolicy:
+    """Fewest queued+running requests; ties go to the most free KV pages."""
+
+    name = "least_loaded"
+
+    def choose(self, req: Request, children: Sequence) -> int:
+        return min(range(len(children)),
+                   key=lambda i: (_load_of(children[i]),
+                                  -_free_pages_of(children[i]), i))
+
+
+class PrefixAffinityPolicy:
+    """Route to the instance whose radix tree holds the longest cached
+    match for the prompt (side-effect-free probe). Ties between equally-good
+    matches break by load, and a match below ``min_match_tokens`` (default:
+    one page) falls back to least-loaded — cold prompts must not pile onto
+    instance 0."""
+
+    name = "prefix_affinity"
+
+    def __init__(self, min_match_tokens: Optional[int] = None):
+        self.min_match_tokens = min_match_tokens
+        self._fallback = LeastLoadedPolicy()
+
+    def _match_tokens(self, child, prompt) -> int:
+        pc = getattr(child, "prefix_cache", None)
+        if pc is None:
+            return 0
+        path = pc.match(prompt, max_tokens=len(prompt) - 1, probe=True)
+        return len(path) * pc.page_size
+
+    def choose(self, req: Request, children: Sequence) -> int:
+        prompt = req.prompt
+        if not prompt:  # length-only (simulator) request: nothing to match
+            return self._fallback.choose(req, children)
+        matches = [self._match_tokens(c, prompt) for c in children]
+        best = max(matches)
+        threshold = self.min_match_tokens
+        if threshold is None:
+            pcs = [getattr(c, "prefix_cache", None) for c in children]
+            threshold = min((pc.page_size for pc in pcs if pc is not None),
+                            default=1)
+        if best < threshold:
+            return self._fallback.choose(req, children)
+        cands = [i for i, m in enumerate(matches) if m == best]
+        return min(cands, key=lambda i: (_load_of(children[i]),
+                                         -_free_pages_of(children[i]), i))
+
+
+POLICIES = {
+    "round_robin": RoundRobinPolicy,
+    "least_loaded": LeastLoadedPolicy,
+    "prefix_affinity": PrefixAffinityPolicy,
+}
+
+
+@dataclasses.dataclass
+class _AggregateCacheStats:
+    """Duck-typed stand-in for a single PrefixCache in ``LLMService.stats``:
+    cluster-wide hit rate over all children's radix trees."""
+
+    hit_tokens: int = 0
+    lookup_tokens: int = 0
+    num_pages: int = 0
+    adopted_pages: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens \
+            else 0.0
+
+
+class RouterBackend:
+    """ServingBackend over N child backends with pluggable placement.
+
+    ``children`` are fully-constructed backends (``PagedEngine`` /
+    ``SimBackend``, mixable). ``policy`` is a name from :data:`POLICIES` or
+    a policy object with ``choose(req, children) -> int``.
+
+    ``prefix_share=True`` enables cross-instance prefix sharing through the
+    distkv publication board (children need ``prefix_cache`` attached):
+    radix paths matched by >= ``hot_threshold`` later requests are published
+    with their page payloads, and peers adopt them at admission.
+    """
+
+    def __init__(self, children: Sequence, *,
+                 policy: Union[str, object] = "round_robin",
+                 prefix_share: bool = False,
+                 hot_threshold: int = 1,
+                 gmanager: Optional[GManager] = None):
+        if not children:
+            raise ValueError("RouterBackend needs at least one child backend")
+        self.children = list(children)
+        self.policy = POLICIES[policy]() if isinstance(policy, str) else \
+            policy
+        self.prefix_share = prefix_share
+        self.hot_threshold = hot_threshold
+        self.g = gmanager or GManager(len(self.children))
+        self.requests_placed: List[int] = [0] * len(self.children)
+        self._placement: Dict[int, int] = {}  # request id -> instance
+        # last-seen prefix_cache.hit_tokens per child: hot-path publication
+        # (draining the cache's recently-hit list) and heartbeats only run
+        # after an iteration that committed new cache hits
+        self._last_hits: List[int] = [0] * len(self.children)
+        self._virtual = all(c.clock() is not None for c in self.children)
+        if prefix_share:
+            sizes = set()
+            for i, child in enumerate(self.children):
+                if getattr(child, "prefix_cache", None) is None:
+                    raise ValueError(
+                        f"prefix_share needs a prefix cache on every child; "
+                        f"instance {i} has none")
+                sizes.add(child.prefix_cache.page_size)
+            if len(sizes) > 1:
+                # adoption re-chunks published token keys by the adopter's
+                # local page size — only sound when pages are interchangeable
+                raise ValueError(
+                    f"prefix_share needs one page size across instances, "
+                    f"got {sorted(sizes)}")
+            for i, child in enumerate(self.children):
+                child.prefix_cache.track_hot = True
+                child.scheduler.prefix_importer = self._make_importer(i)
+        self._heartbeat_all()
+
+    # -- distkv wiring ---------------------------------------------------------
+
+    def _heartbeat_all(self) -> None:
+        for i, child in enumerate(self.children):
+            self.g.heartbeat(Heartbeat(i, child.allocator.num_free,
+                                       child.allocator.num_blocks))
+
+    def _export_payload(self, child, block):
+        fn = getattr(child, "export_page_payload", None)
+        return fn(block) if fn is not None else None
+
+    def _publish_hot(self, i: int) -> None:
+        """Export any radix path on instance ``i`` that just crossed the hit
+        threshold to the cluster board (token keys + page payloads). Pages
+        the board already holds are not re-exported — payload export is a
+        device->host page copy on engine children."""
+        child = self.children[i]
+        pc = child.prefix_cache
+        board = self.g.prefix_board
+        for tokens, blocks in pc.take_hot_paths(self.hot_threshold):
+            have = board.covered(tokens)
+            payloads = [None] * have + \
+                [self._export_payload(child, b) for b in blocks[have:]]
+            board.publish(i, tokens, payloads, pc.page_size)
+
+    def _make_importer(self, i: int):
+        """The child scheduler's adopt-imported-pages hook: given a prompt
+        and the tokens already matched locally, adopt the longest published
+        extension into instance ``i``'s own radix tree."""
+        child = self.children[i]
+
+        def importer(prompt: Sequence[int], local_tokens: int) -> int:
+            pc = child.prefix_cache
+            pages = self.g.prefix_board.match(prompt,
+                                              max_tokens=len(prompt) - 1)
+            write = getattr(child, "import_page_payloads", None)
+            if write is not None:
+                # a real engine can only adopt pages whose KV contents were
+                # published (a cost-model sim publishes payload=None — its
+                # pages are bookkeeping-only and unusable here). Keep the
+                # longest payload-backed prefix.
+                n_ok = 0
+                for page in pages:
+                    if page.payload is None:
+                        break
+                    n_ok += 1
+                pages = pages[:n_ok]
+            if len(pages) * pc.page_size <= local_tokens:
+                return 0  # the local tree already matches at least as far
+            tokens = [t for page in pages for t in page.key]
+            adopted = pc.adopt(tokens)
+            if write is not None and adopted:
+                write([b for _, b in adopted],
+                      [pages[idx].payload for idx, _ in adopted])
+            return len(adopted)
+
+        return importer
+
+    # -- placement -------------------------------------------------------------
+
+    def place(self, req: Request) -> int:
+        """Pick an instance for ``req`` (exposed for tests/benchmarks)."""
+        return self.policy.choose(req, self.children)
+
+    def add_request(self, req: Request) -> None:
+        if req.parent_id is not None and req.parent_id in self._placement:
+            # best-of-n sibling: co-locate with the parent so the child can
+            # COW-fork the parent's prefill instead of prefilling again
+            i = self._placement[req.parent_id]
+        else:
+            i = self.place(req)
+        req.instance_id = i
+        self._placement[req.request_id] = i
+        self.requests_placed[i] += 1
+        child = self.children[i]
+        clk = child.clock()
+        if clk is not None and clk < req.arrival_time:
+            # virtual child idle in the past: it cannot serve a request
+            # before the request exists
+            child.advance_to(req.arrival_time)
+        child.add_request(req)
+
+    # -- ServingBackend protocol -------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return any(c.has_work for c in self.children)
+
+    def clock(self) -> Optional[float]:
+        if not self._virtual:
+            return None
+        busy = [c.clock() for c in self.children if c.has_work]
+        if busy:
+            return min(busy)
+        return max(c.clock() for c in self.children)
+
+    def advance_to(self, t: float) -> None:
+        for c in self.children:
+            if c.clock() is not None:
+                c.advance_to(t)
+
+    @property
+    def iterations(self) -> int:
+        return sum(getattr(c, "iterations", 0) for c in self.children)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(getattr(c, "preemptions", 0) for c in self.children)
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        finished: List[Request] = []
+        if self._virtual:
+            # event-driven: advance the laggard instance that can actually
+            # make progress (a stuck instance — e.g. a prompt that can never
+            # fit — must not starve the others)
+            order = sorted((i for i, c in enumerate(self.children)
+                            if c.has_work),
+                           key=lambda i: self.children[i].clock())
+            for i in order:
+                child = self.children[i]
+                before = getattr(child, "iterations", None)
+                got = child.step(now)
+                finished.extend(got)
+                if got or before is None or \
+                        getattr(child, "iterations", None) != before:
+                    self._after_step(i)
+                    break
+        else:
+            for i, child in enumerate(self.children):
+                if child.has_work:
+                    finished.extend(child.step(now))
+                    self._after_step(i)
+        return finished
+
+    def _after_step(self, i: int) -> None:
+        if not self.prefix_share:
+            return
+        hits = self.children[i].prefix_cache.hit_tokens
+        if hits != self._last_hits[i]:
+            # only a committed admission hit can push a node over the hot
+            # threshold — skip the tree walk (and gManager heartbeats) on
+            # the vast majority of steps where nothing changed
+            self._last_hits[i] = hits
+            self._publish_hot(i)
+            self._heartbeat_all()
+
+    # -- aggregate stats ---------------------------------------------------------
+
+    @property
+    def prefix_cache(self) -> Optional[_AggregateCacheStats]:
+        agg = _AggregateCacheStats()
+        seen = False
+        for c in self.children:
+            pc = getattr(c, "prefix_cache", None)
+            if pc is None:
+                continue
+            seen = True
+            agg.hit_tokens += pc.hit_tokens
+            agg.lookup_tokens += pc.lookup_tokens
+            agg.num_pages += pc.num_pages
+            agg.adopted_pages += pc.adopted_pages
+        return agg if seen else None
+
+    def instance_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-instance breakdown for ``LLMService.stats``."""
+        out = {}
+        for i, c in enumerate(self.children):
+            row = {
+                "requests": self.requests_placed[i],
+                "iterations": getattr(c, "iterations", 0),
+                "preemptions": getattr(c, "preemptions", 0),
+                "waiting": len(c.scheduler.waiting),
+                "running": len(c.scheduler.running),
+                "free_pages": c.allocator.num_free,
+            }
+            pc = getattr(c, "prefix_cache", None)
+            if pc is not None:
+                row["prefix_hit_rate"] = pc.hit_rate
+                row["cached_pages"] = pc.num_pages
+                row["adopted_pages"] = pc.adopted_pages
+            out[i] = row
+        return out

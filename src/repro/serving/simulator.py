@@ -62,6 +62,9 @@ class SimResult:
     # radix prefix-cache stats (None when the cache is disabled)
     prefix_hit_rate: Optional[float] = None
     cached_pages: int = 0
+    # multi-instance router runs: per-instance breakdown + adopted pages
+    per_instance: Optional[Dict[int, Dict]] = None
+    adopted_pages: int = 0
 
     @property
     def finished(self) -> List[Request]:
@@ -141,18 +144,27 @@ def make_workload(n: int, *, rate: float, dist: str = "sharegpt",
 def make_shared_prefix_workload(n: int, *, rate: float, n_groups: int = 4,
                                 prefix_len: int = 512, suffix_len: int = 64,
                                 out_len: int = 128, seed: int = 0,
+                                group_draw: str = "cyclic",
                                 vocab: int = 32_000) -> List[Request]:
     """Shared-system-prompt traffic: each request is one of ``n_groups``
     shared system prompts plus a unique user suffix (real token ids so the
-    radix cache can key on pages)."""
+    radix cache can key on pages).
+
+    ``group_draw``: "cyclic" assigns request ``i`` to group ``i % n_groups``
+    (deterministic, good for single-instance cache studies); "random" draws
+    the group per request (a stochastic tenant mix — required for honest
+    multi-instance routing comparisons, where a cyclic assignment can
+    accidentally align with a round-robin placement and look affine)."""
     rng = np.random.default_rng(seed)
     arr = np.cumsum(rng.exponential(1.0 / rate, n))
     prefixes = [rng.integers(0, vocab, prefix_len).tolist()
                 for _ in range(n_groups)]
     reqs = []
     for i in range(n):
+        g = i % n_groups if group_draw == "cyclic" else \
+            int(rng.integers(0, n_groups))
         suf = int(rng.integers(max(1, suffix_len // 2), suffix_len + 1))
-        prompt = prefixes[i % n_groups] + rng.integers(0, vocab, suf).tolist()
+        prompt = prefixes[g] + rng.integers(0, vocab, suf).tolist()
         o = int(np.clip(rng.lognormal(np.log(out_len), 0.4), 1, 4 * out_len))
         reqs.append(Request(i, float(arr[i]), prompt, max_new_tokens=o))
     return reqs
@@ -258,9 +270,15 @@ class SimBackend:
 
     def step(self, now: Optional[float] = None) -> List[Request]:
         plan = self.scheduler.schedule()
-        if plan.empty:
-            return []
         self.preemptions += len(plan.preempted)
+        if plan.empty:
+            # nothing computed, but a preemption may still have happened
+            # (a lone request outgrowing the whole pool preempts *itself*,
+            # leaving an empty plan) — complete_iteration must still run so
+            # the max_preemptions drop policy can retire it, else the
+            # backend stalls forever with the request bouncing in waiting
+            return self.scheduler.complete_iteration(plan, self._now) \
+                if plan.preempted else []
         sum_ctx = sum(r.context_len for r in plan.decode)
         self._now += self.cost.iteration_time(plan.token_count(), sum_ctx)
         # simulate generation: each scheduled request emits one token
@@ -313,6 +331,60 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
     if backend.prefix_cache is not None:
         res.prefix_hit_rate = backend.prefix_cache.hit_rate
         res.cached_pages = backend.prefix_cache.num_pages
+    return res
+
+
+def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
+                    policy: str = "round_robin",
+                    prefix_cache: bool = True,
+                    prefix_share: bool = False,
+                    hot_threshold: int = 1,
+                    blocks_per_instance: int = 1800, block_size: int = 16,
+                    max_running: int = 64,
+                    max_tokens_per_iter: int = 8192,
+                    max_preemptions: Optional[int] = None,
+                    cost: Optional[CostModel] = None) -> SimResult:
+    """Virtual-clock cluster sim: N :class:`SimBackend` instances behind a
+    :class:`~repro.serving.router.RouterBackend`, driven to completion
+    through the LLMService front-end. The event-driven router advances the
+    laggard instance each step, so policy sweeps over many instances run in
+    milliseconds of wall time.
+
+    ``policy``: ``round_robin`` | ``least_loaded`` | ``prefix_affinity``
+    (see ``serving.router.POLICIES``). ``prefix_share`` publishes hot radix
+    paths through the distkv board so instances adopt each other's cached
+    prefixes (requests need real token ids)."""
+    from repro.serving.api import LLMService  # late: api imports Request
+    from repro.serving.router import RouterBackend
+
+    children = [SimBackend(num_blocks=blocks_per_instance,
+                           block_size=block_size, max_running=max_running,
+                           max_tokens_per_iter=max_tokens_per_iter,
+                           prefix_cache=prefix_cache,
+                           max_preemptions=max_preemptions, cost=cost)
+                for _ in range(n_instances)]
+    router = RouterBackend(children, policy=policy,
+                           prefix_share=prefix_share,
+                           hot_threshold=hot_threshold)
+    svc = LLMService(router)
+    for r in sorted(requests, key=lambda r: r.arrival_time):
+        svc.submit_request(r)
+    svc.drain()
+    # utilization over instances that actually held tables — an idle
+    # instance's vacuous 1.0 default would flatter a policy that
+    # concentrates load
+    utils = [c.kv_utilization for c in children if c._utils]
+    res = SimResult(list(requests), makespan=router.clock(),
+                    peak_memory_frac=max(c.peak_memory_frac
+                                         for c in children),
+                    kv_utilization=float(np.mean(utils)) if utils else 1.0,
+                    preemptions=router.preemptions,
+                    per_instance=router.instance_stats())
+    agg = router.prefix_cache
+    if agg is not None:
+        res.prefix_hit_rate = agg.hit_rate
+        res.cached_pages = agg.num_pages
+        res.adopted_pages = agg.adopted_pages
     return res
 
 

@@ -23,6 +23,19 @@ def model_setup():
     return cfg, model, params
 
 
+@pytest.fixture(scope="module")
+def model_setup_f32():
+    """Float32 everywhere (params, KV pages, logits): the engine and the
+    ring-cache oracle agree bit-for-bit well past argmax resolution, so
+    greedy comparisons are exact instead of flaky on bf16 near-ties."""
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None, dtype="float32",
+                              logits_fp32=True)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
 def _oracle(model, params, cfg, prompt, n):
     tokens = jnp.asarray(prompt, jnp.int32)[None]
     logits, caches = model.prefill(params, tokens, seq_capacity=128)
@@ -36,6 +49,13 @@ def _oracle(model, params, cfg, prompt, n):
         out.append(tok)
         pos += 1
     return out
+
+
+def _oracle_next_logits(model, params, tokens):
+    """Next-token logits after feeding ``tokens`` (prefill last position)."""
+    logits, _ = model.prefill(params, jnp.asarray(tokens, jnp.int32)[None],
+                              seq_capacity=128)
+    return np.asarray(logits[0])
 
 
 def test_engine_matches_sequential_oracle(model_setup):
@@ -54,6 +74,66 @@ def test_engine_matches_sequential_oracle(model_setup):
     for r in reqs:
         want = _oracle(model, params, cfg, r.prompt, len(r.full_output))
         assert r.full_output == want, f"req {r.request_id}"
+
+
+def test_bf16_divergence_is_argmax_tie_artifact(model_setup, model_setup_f32):
+    """ROADMAP follow-up: the rare engine-vs-oracle greedy divergence under
+    bf16 is an argmax (near-)tie artifact, not a numerics bug.
+
+    Short (3-token) prompts are replayed on the bf16 engine and the bf16
+    oracle. Wherever the two streams first disagree, the oracle's own bf16
+    logits at that step must rate the two winners within ONE bf16 ulp —
+    i.e. the candidates are indistinguishable at bf16 resolution, and the
+    two (both correct) implementations merely resolve the tie through
+    different accumulation orders. With float32 compute the same prompts
+    must match token-for-token (see model_setup_f32)."""
+    cfg, model, params = model_setup
+    cfg32, model32, params32 = model_setup_f32
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size, 3).tolist() for _ in range(8)]
+    n_new = 6
+
+    eng = PagedEngine(cfg, params, EngineConfig(num_pages=64, page_size=8,
+                                                max_slots=4))
+    reqs = [Request(i, 0.0, list(p), max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_to_completion()
+
+    for r in reqs:
+        got = r.full_output
+        want = _oracle(model, params, cfg, r.prompt, n_new)
+        if got == want:
+            continue
+        i = next(k for k, (a, b) in enumerate(zip(got, want)) if a != b)
+        # both streams share the context up to the divergence point; the
+        # bf16 logits there must rate the winners within one ulp (bf16 has
+        # 8 mantissa bits -> ulp ~= magnitude * 2^-8; allow 2^-7 for the
+        # boundary case spanning an exponent step)
+        ctx = r.prompt + want[:i]
+        lg = _oracle_next_logits(model, params, ctx)
+        gap = abs(float(lg[got[i]]) - float(lg[want[i]]))
+        ulp = float(np.abs(lg).max()) * 2.0 ** -7
+        assert gap <= ulp, (
+            f"req {r.request_id}: bf16 divergence at step {i} is NOT a "
+            f"near-tie (logit gap {gap} > one bf16 ulp {ulp}) — real "
+            f"numerics bug, not a tie artifact")
+
+    # float32: tie-free at argmax resolution — same prompts, exact match
+    eng32 = PagedEngine(cfg32, params32, EngineConfig(num_pages=64,
+                                                      page_size=8,
+                                                      max_slots=4))
+    reqs32 = [Request(i, 0.0, list(p), max_new_tokens=n_new)
+              for i, p in enumerate(prompts)]
+    for r in reqs32:
+        eng32.add_request(r)
+    eng32.run_to_completion()
+    for r in reqs32:
+        want = _oracle(model32, params32, cfg32, r.prompt, n_new)
+        assert r.full_output == want, f"req {r.request_id} (float32)"
+    # (bf16 divergence is rare: zero diverging prompts in this sample is
+    # fine — the float32 half still proves the comparison is exact)
 
 
 def test_engine_pallas_kernel_path(model_setup):
@@ -82,8 +162,15 @@ def test_engine_swa_arch(model_setup):
     assert r.full_output == want
 
 
-def test_engine_continuous_batching_admits_late_request(model_setup):
-    cfg, model, params = model_setup
+def test_engine_continuous_batching_admits_late_request(model_setup_f32):
+    # float32 compute: this test's 3-token prompt sits exactly on a bf16
+    # argmax near-tie (top-2 logits one bf16 ulp apart), which the engine
+    # and the ring-cache oracle legitimately break differently — the
+    # pre-existing tier-1 flake recorded in ROADMAP, dissected by
+    # test_bf16_divergence_is_argmax_tie_artifact. In float32 the
+    # comparison is exact and the continuous-batching property under test
+    # (late joiners don't perturb running requests) is checked tightly.
+    cfg, model, params = model_setup_f32
     eng = PagedEngine(cfg, params, EngineConfig(num_pages=64, page_size=8,
                                                 max_slots=4))
     r1 = Request(0, 0.0, [1, 2, 3], max_new_tokens=6)

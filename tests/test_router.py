@@ -1,0 +1,514 @@
+"""Cluster router: placement policies, ServingBackend conformance, request
+conservation, N=1 equivalence with a bare backend, and cross-instance prefix
+sharing through the distkv publication board (the PR's acceptance test: a
+prefix computed on instance A hits the cache on instance B)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.distkv.prefixshare import PrefixShareBoard
+from repro.core.scheduling.request import Request
+from repro.serving.api import (FINISH_REASONS, LLMService, SamplingParams,
+                               ServingBackend)
+from repro.serving.router import (POLICIES, LeastLoadedPolicy,
+                                  PrefixAffinityPolicy, RouterBackend,
+                                  RoundRobinPolicy)
+from repro.serving.simulator import (SimBackend, make_shared_prefix_workload,
+                                     make_workload, simulate_router)
+
+PS = 8  # page size for the engine tests
+
+
+class ScriptedPolicy:
+    """Test helper: place request k on ``script[k]`` (order of submission)."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self._i = 0
+
+    def choose(self, req, children):
+        i = self.script[self._i]
+        self._i += 1
+        return i
+
+
+def _sim_children(n, **kw):
+    kw.setdefault("num_blocks", 256)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("max_running", 16)
+    kw.setdefault("prefix_cache", True)
+    return [SimBackend(**kw) for _ in range(n)]
+
+
+def _drain(router, max_steps=10_000):
+    for _ in range(max_steps):
+        if not router.has_work:
+            return
+        router.step()
+    raise RuntimeError("router did not drain")
+
+
+# -- protocol + clock semantics -------------------------------------------------
+
+def test_router_is_a_serving_backend():
+    router = RouterBackend(_sim_children(3))
+    assert isinstance(router, ServingBackend)
+    assert router.clock() == 0.0  # all-virtual cluster: virtual frontier
+    assert not router.has_work
+
+
+def test_router_event_driven_clock_advances_laggard():
+    router = RouterBackend(_sim_children(2), policy="round_robin")
+    a, b = router.children
+    router.add_request(Request(0, 0.0, [], max_new_tokens=4, prompt_len=8))
+    router.add_request(Request(1, 0.0, [], max_new_tokens=4, prompt_len=8))
+    router.step()  # advances exactly one (the laggard) instance
+    stepped = sorted([a.iterations, b.iterations])
+    assert stepped == [0, 1]
+    _drain(router)
+    assert router.iterations == a.iterations + b.iterations
+    # frontier clock: no work left -> max of children
+    assert router.clock() == max(a.clock(), b.clock())
+
+
+def test_router_add_request_advances_idle_instance_to_arrival():
+    router = RouterBackend(_sim_children(2))
+    req = Request(0, 5.0, [], max_new_tokens=2, prompt_len=4)
+    router.add_request(req)
+    # the instance serving it cannot run before the request exists
+    assert router.children[req.instance_id].clock() >= 5.0
+
+
+# -- placement policies ---------------------------------------------------------
+
+def test_round_robin_cycles():
+    router = RouterBackend(_sim_children(3), policy="round_robin")
+    reqs = [Request(i, 0.0, [], max_new_tokens=1, prompt_len=4)
+            for i in range(6)]
+    for r in reqs:
+        router.add_request(r)
+    assert [r.instance_id for r in reqs] == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_prefers_idle_instance():
+    router = RouterBackend(_sim_children(3), policy="least_loaded")
+    r0 = Request(0, 0.0, [], max_new_tokens=8, prompt_len=16)
+    router.add_request(r0)
+    r1 = Request(1, 0.0, [], max_new_tokens=8, prompt_len=16)
+    router.add_request(r1)
+    assert r1.instance_id != r0.instance_id  # instance 0 already has load
+
+
+def test_prefix_affinity_routes_to_cached_instance():
+    router = RouterBackend(_sim_children(2, block_size=8),
+                           policy="prefix_affinity")
+    prefix = list(range(100, 132))  # 4 pages of 8
+    warm = Request(0, 0.0, prefix + [1, 2, 3], max_new_tokens=2)
+    router.add_request(warm)
+    _drain(router)
+    warm_inst = warm.instance_id
+    # the warm instance now holds the prefix pages; a same-prefix request
+    # must follow them even though the other instance is emptier
+    follow = Request(1, 10.0, prefix + [7, 8, 9], max_new_tokens=2)
+    router.add_request(follow)
+    assert follow.instance_id == warm_inst
+    # a cold prompt falls back to least-loaded, not instance 0 by default
+    cold = Request(2, 10.0, list(range(900, 940)), max_new_tokens=2)
+    router.add_request(cold)
+    assert cold.instance_id != warm_inst or \
+        len(router.children[warm_inst].scheduler.waiting) == 0
+
+
+def test_best_of_n_siblings_co_located():
+    router = RouterBackend(_sim_children(4), policy="round_robin")
+    svc = LLMService(router)
+    svc.submit(list(range(32)), SamplingParams(
+        temperature=1.0, n=3, max_new_tokens=2, seed=1))
+    svc.drain()
+    placed = [n for n in router.requests_placed if n]
+    assert placed == [3]  # the whole fork family on one instance
+
+
+def test_policy_registry_complete():
+    assert set(POLICIES) == {"round_robin", "least_loaded",
+                             "prefix_affinity"}
+    assert isinstance(POLICIES["round_robin"](), RoundRobinPolicy)
+    assert isinstance(POLICIES["least_loaded"](), LeastLoadedPolicy)
+    assert isinstance(POLICIES["prefix_affinity"](), PrefixAffinityPolicy)
+
+
+def test_affinity_probe_has_no_side_effects():
+    """Routing probes must not perturb LRU order or hit counters — probing
+    every instance per request would otherwise publish never-reused paths."""
+    child = SimBackend(num_blocks=32, block_size=8, prefix_cache=True)
+    pc = child.prefix_cache
+    svc = LLMService(child)
+    svc.generate([list(range(24))], SamplingParams(max_new_tokens=2))
+    clock_before = pc._clock
+    hits_before = sum(n.hit_count for n in pc.root.children.values())
+    pol = PrefixAffinityPolicy()
+    probe_req = Request(99, 0.0, list(range(24)), max_new_tokens=1)
+    pol.choose(probe_req, [child])
+    assert pc._clock == clock_before
+    assert sum(n.hit_count for n in pc.root.children.values()) == hits_before
+
+
+# -- request conservation -------------------------------------------------------
+
+def _check_conservation(requests, n_instances, policy, **sim_kw):
+    """Every submitted request reaches exactly one terminal finish_reason,
+    exactly once, and leaves no pages referenced by dead block tables."""
+    children = _sim_children(n_instances, **sim_kw)
+    router = RouterBackend(children, policy=policy)
+    svc = LLMService(router)
+    for r in requests:
+        svc.submit_request(r)
+    finish_events = {}
+    idle = 0
+    while svc.pending and idle < 4:
+        chunks = svc.poll()
+        idle = 0 if svc._progressed else idle + 1
+        for ch in chunks:
+            if ch.finished:
+                finish_events[ch.request_id] = \
+                    finish_events.get(ch.request_id, 0) + 1
+    assert not svc.pending, "router stalled with work left"
+    assert sorted(finish_events) == sorted(r.request_id for r in requests)
+    assert all(v == 1 for v in finish_events.values()), finish_events
+    for r in requests:
+        assert r.finish_reason in FINISH_REASONS, r.finish_reason
+    # every request was placed exactly once
+    assert sum(router.requests_placed) == len(requests)
+    # no leaked per-request state: all block tables freed (tree-held cache
+    # pages may legitimately remain allocated)
+    for c in children:
+        assert not c.scheduler.tables
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("n_instances", [1, 3])
+def test_request_conservation_examples(policy, n_instances):
+    wl = make_shared_prefix_workload(40, rate=200.0, n_groups=3,
+                                    prefix_len=96, suffix_len=24,
+                                    out_len=16, seed=7, group_draw="random")
+    _check_conservation(wl, n_instances, policy)
+
+
+def test_request_conservation_under_drops():
+    """Terminal exactly-once also under preempted-dropped finishes."""
+    reqs = [Request(i, 0.0, [], max_new_tokens=40, prompt_len=30)
+            for i in range(6)]
+    _check_conservation(reqs, 2, "least_loaded", num_blocks=8, block_size=8,
+                        prefix_cache=False, max_preemptions=0)
+
+
+if HAVE_HYPOTHESIS:
+    policy_st = st.sampled_from(sorted(POLICIES))
+else:  # shim: strategies are inert, @given skips
+    policy_st = st.none()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 5), policy_st,
+       st.booleans())
+def test_request_conservation_property(seed, n_instances, policy, shuffle):
+    """PROPERTY: under any policy, instance count, and arrival order, every
+    request finishes exactly once with a terminal reason."""
+    rng = np.random.default_rng(seed)
+    wl = make_workload(20, rate=float(rng.uniform(20, 400)), seed=seed,
+                       max_len=256, materialize_tokens=True)
+    if shuffle:  # submission order need not match arrival order
+        rng.shuffle(wl)
+    _check_conservation(wl, n_instances, policy)
+
+
+# -- distkv publication board ---------------------------------------------------
+
+def test_board_publish_and_match():
+    b = PrefixShareBoard()
+    toks = list(range(32))
+    assert b.publish(0, toks, [f"p{i}" for i in range(4)], 8) == 4
+    # republication of a shorter overlapping path adds nothing
+    assert b.publish(1, toks[:16], ["x", "y"], 8) == 0
+    hit = b.match(toks[:24] + [999] * 8)
+    assert [p.payload for p in hit] == ["p0", "p1", "p2"]
+    assert all(p.home == 0 for p in hit)  # first publisher wins
+    assert b.match([7] * 32) == []
+    assert b.stats()["published_pages"] == 4
+
+
+def test_router_share_rejects_mixed_page_sizes():
+    """Adoption re-chunks published token keys by the adopter's page size —
+    a cluster mixing page sizes must be rejected up front, not crash when
+    the first cross-size payload is written."""
+    children = [SimBackend(num_blocks=64, block_size=8, prefix_cache=True),
+                SimBackend(num_blocks=64, block_size=16, prefix_cache=True)]
+    with pytest.raises(ValueError, match="page size"):
+        RouterBackend(children, prefix_share=True)
+    RouterBackend(children)  # without sharing, mixing is fine
+
+
+def test_board_rejects_mixed_page_sizes():
+    b = PrefixShareBoard()
+    b.publish(0, list(range(8)), ["p"], 8)
+    with pytest.raises(ValueError):
+        b.publish(1, list(range(16)), ["q"], 16)
+
+
+def test_rmanager_prefix_passthrough():
+    from repro.core.distkv import GManager, RManager
+    from repro.core.paging import BlockAllocator
+    g = GManager(2)
+    rms = {i: RManager(i, BlockAllocator(8, 8), g) for i in range(2)}
+    for r in rms.values():
+        r.register_peers(rms)
+    rms[0].publish_prefix(list(range(16)), ["a", "b"])
+    hit = rms[1].lookup_prefix(list(range(16)))
+    assert [p.payload for p in hit] == ["a", "b"]
+    assert g.prefix_board.published_pages == 2
+
+
+# -- cross-instance prefix sharing (sim) ----------------------------------------
+
+def test_cross_instance_prefix_adoption_sim():
+    """ACCEPTANCE: a prefix computed on instance A is adopted by instance B
+    through the publication board, and B's request is admitted with the
+    prefix already cached (no recompute)."""
+    children = _sim_children(2, block_size=8)
+    router = RouterBackend(children, policy=ScriptedPolicy([0, 0, 1]),
+                           prefix_share=True, hot_threshold=1)
+    a, b = children
+    prefix = list(range(200, 232))  # 4 pages of 8
+    r0 = Request(0, 0.0, prefix + [1, 2, 3], max_new_tokens=2)
+    router.add_request(r0)
+    _drain(router)  # A computes + inserts the prefix
+    assert router.g.prefix_board.published_pages == 0  # not hot yet
+    r1 = Request(1, 1.0, prefix + [4, 5, 6], max_new_tokens=2)
+    router.add_request(r1)
+    _drain(router)  # A hits its own cache -> path is hot -> published
+    assert router.g.prefix_board.published_pages >= 4
+    assert b.prefix_cache.adopted_pages == 0
+    r2 = Request(2, 2.0, prefix + [7, 8, 9], max_new_tokens=2)
+    router.add_request(r2)
+    _drain(router)
+    # B adopted A's pages instead of recomputing the prefix
+    assert r2.instance_id == 1
+    assert b.prefix_cache.adopted_pages == 4
+    assert r2.num_cached_tokens == 32
+    assert b.prefix_cache.hit_tokens >= 32
+
+
+def test_adoption_shrinks_prefill_cost_sim():
+    """The adopted prefix must not be recomputed: B's prefill charges only
+    the suffix tokens (visible as fewer flattened tokens -> faster iter)."""
+    def run(share):
+        children = _sim_children(2, block_size=8)
+        router = RouterBackend(children, policy=ScriptedPolicy([0, 0, 1]),
+                               prefix_share=share, hot_threshold=1)
+        svc = LLMService(router)
+        prefix = list(range(500, 564))  # 8 pages
+        for k, t in enumerate([0.0, 1.0, 2.0]):
+            svc.submit(prefix + [k] * 5,
+                       SamplingParams(max_new_tokens=2), arrival_time=t)
+        svc.drain()
+        return svc.stats()
+
+    base, shared = run(False), run(True)
+    assert shared.prefix_hit_rate > base.prefix_hit_rate
+    assert shared.per_instance[1]["adopted_pages"] == 8
+    assert base.per_instance[1].get("adopted_pages", 0) == 0
+
+
+def test_simulate_router_smoke_and_stats():
+    wl = make_shared_prefix_workload(30, rate=100.0, n_groups=2,
+                                    prefix_len=64, suffix_len=16,
+                                    out_len=8, seed=3, group_draw="random")
+    res = simulate_router(wl, n_instances=3, policy="prefix_affinity",
+                          blocks_per_instance=128, block_size=16)
+    assert res.completed_frac == 1.0
+    assert res.prefix_hit_rate is not None and res.prefix_hit_rate > 0
+    assert set(res.per_instance) == {0, 1, 2}
+    assert sum(r["requests"] for r in res.per_instance.values()) == 30
+
+
+def test_router_metrics_carry_instance_id():
+    router = RouterBackend(_sim_children(2), policy="round_robin")
+    svc = LLMService(router)
+    outs, _ = svc.replay(make_workload(6, rate=100.0, seed=5, max_len=128,
+                                       materialize_tokens=True))
+    assert [o.metrics.instance_id for o in outs] == [0, 1, 0, 1, 0, 1]
+
+
+def test_hit_count_only_on_committed_admissions():
+    """A request retrying admission under memory pressure must not inflate
+    hit counters (and thus must not trigger spurious hot-path publication):
+    counters move only via record_admission on a committed admission."""
+    from repro.core.paging import BlockAllocator
+    from repro.core.prefixcache import PrefixCache
+    from repro.core.scheduling import IterationScheduler
+    a = BlockAllocator(6, 8)
+    pc = PrefixCache(a)
+    sched = IterationScheduler(a, prefix_cache=pc, max_tokens_per_iter=64)
+    prefix = list(range(16))  # 2 pages
+    r0 = Request(0, 0.0, prefix + [1], max_new_tokens=1)
+    sched.add_request(r0)
+    sched.complete_iteration(sched.schedule(), 0.0)  # insert, no reuse yet
+    top = next(iter(pc.root.children.values()))
+    assert top.hit_count == 0
+    # too big to ever admit (5 suffix pages > 3 usable): every schedule()
+    # matches + locks + rolls back — counters must not move
+    big = Request(1, 0.0, prefix + list(range(100, 140)), max_new_tokens=1)
+    sched.add_request(big)
+    for _ in range(5):
+        sched.schedule()
+    assert top.hit_count == 0
+    # a request that actually commits bumps exactly once
+    ok = Request(2, 0.0, prefix + [7], max_new_tokens=1)
+    sched.add_request(ok)
+    sched.waiting.remove(big)
+    sched.schedule()
+    assert top.hit_count == 1
+    assert ok.num_cached_tokens == 16
+
+
+# -- engine integration ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_setup():
+    from repro.configs import smoke_config
+    from repro.models import Model
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None, logits_fp32=True)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(cfg, params, **kw):
+    from repro.serving.engine import EngineConfig, PagedEngine
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("max_slots", 4)
+    return PagedEngine(cfg, params, EngineConfig(**kw))
+
+
+def _oracle(model, params, prompt, n):
+    tokens = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, tokens, seq_capacity=128)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    pos = len(prompt)
+    while len(out) < n:
+        lg, caches = model.decode_step(params, jnp.array([[tok]], jnp.int32),
+                                       jnp.array([pos], jnp.int32), caches)
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_router_n1_token_identical_to_bare_backend(model_setup):
+    """ACCEPTANCE: RouterBackend([backend]) is a transparent wrapper — a
+    seeded mixed greedy+sampled batch produces token-identical outputs and
+    finish reasons to the bare backend."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)))
+               .tolist() for _ in range(4)]
+    sp = [SamplingParams(max_new_tokens=5),
+          SamplingParams(max_new_tokens=5, temperature=0.9, top_p=0.9,
+                         seed=3),
+          SamplingParams(max_new_tokens=5, temperature=1.2, top_k=40,
+                         seed=4),
+          SamplingParams(max_new_tokens=3, eos_token=None)]
+
+    def run(make_backend):
+        svc = LLMService(make_backend())
+        rids = [svc.submit(p, s) for p, s in zip(prompts, sp)]
+        svc.drain()
+        return [svc._results[r] for r in rids]
+
+    bare = run(lambda: _engine(cfg, params))
+    routed = run(lambda: RouterBackend([_engine(cfg, params)],
+                                       policy="least_loaded"))
+    for o_b, o_r in zip(bare, routed):
+        assert o_r.token_ids == o_b.token_ids
+        assert o_r.finish_reason == o_b.finish_reason
+    assert all(o.metrics.instance_id == 0 for o in routed)
+
+
+def test_cross_instance_prefix_adoption_engine(model_setup):
+    """ACCEPTANCE (real engines): instance B adopts A's published page
+    payloads and decodes token-identically to the oracle — proving the
+    transferred KV contents are the real thing, not just bookkeeping."""
+    cfg, model, params = model_setup
+    engines = [_engine(cfg, params, enable_prefix_cache=True)
+               for _ in range(2)]
+    router = RouterBackend(engines, policy=ScriptedPolicy([0, 0, 1]),
+                           prefix_share=True, hot_threshold=1)
+    rng = np.random.default_rng(12)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    reqs = [Request(i, 0.0, prefix +
+                    rng.integers(0, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=3) for i in range(3)]
+    for i in (0, 1):
+        router.add_request(reqs[i])
+        _drain(router)
+    assert router.g.prefix_board.published_pages >= 2
+    router.add_request(reqs[2])
+    _drain(router)
+    assert reqs[2].instance_id == 1
+    assert engines[1].prefix_cache.adopted_pages == 2
+    assert reqs[2].num_cached_tokens == 2 * PS
+    # adopted KV is numerically right: greedy continuation matches the
+    # from-scratch oracle
+    for r in reqs:
+        assert r.full_output == _oracle(model, params, r.prompt, 3), \
+            f"req {r.request_id}"
+
+
+def test_mixed_cluster_share_engine_skips_payloadless_pages(model_setup):
+    """A sim child publishes bookkeeping-only pages (payload None); an
+    engine peer must neither crash on them nor adopt them — it recomputes
+    the prefix and still decodes correctly."""
+    cfg, model, params = model_setup
+    sim = SimBackend(num_blocks=64, block_size=PS, prefix_cache=True)
+    eng = _engine(cfg, params, enable_prefix_cache=True)
+    router = RouterBackend([sim, eng], policy=ScriptedPolicy([0, 0, 1]),
+                           prefix_share=True, hot_threshold=1)
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    reqs = [Request(i, 0.0, prefix +
+                    rng.integers(0, cfg.vocab_size, 3).tolist(),
+                    max_new_tokens=2) for i in range(3)]
+    for i in (0, 1):
+        router.add_request(reqs[i])
+        _drain(router)
+    assert router.g.prefix_board.published_pages >= 2  # sim, payload None
+    router.add_request(reqs[2])
+    _drain(router)  # engine request: must not crash on None payloads
+    assert reqs[2].instance_id == 1
+    assert eng.prefix_cache.adopted_pages == 0
+    assert reqs[2].num_cached_tokens == 0
+    assert reqs[2].full_output == _oracle(model, params, reqs[2].prompt, 2)
+
+
+def test_router_mixed_engine_and_sim_children(model_setup):
+    """Engine + sim children behind one router (wall-clock semantics)."""
+    cfg, model, params = model_setup
+    router = RouterBackend(
+        [_engine(cfg, params), SimBackend(num_blocks=64, block_size=8)],
+        policy="round_robin")
+    assert router.clock() is None  # any wall-clock child -> caller time
+    svc = LLMService(router)
+    rng = np.random.default_rng(9)
+    outs = svc.generate([rng.integers(0, cfg.vocab_size, 6).tolist()
+                         for _ in range(4)],
+                        SamplingParams(max_new_tokens=3))
+    assert [o.metrics.instance_id for o in outs] == [0, 1, 0, 1]
+    assert all(o.finish_reason == "length" for o in outs)

@@ -71,31 +71,58 @@ def test_sharded_train_step_matches_single_device():
 
 @pytest.mark.slow
 def test_sharded_moe_matches_single_device():
+    # Tolerances, measured and justified (this test used to assert bf16
+    # max-logit-err < 0.08 and failed at 0.0898 — a marginal, ill-posed
+    # bound):
+    #
+    # * float32 run, max err < 5e-3 (measured 1.6e-3; the *dense* GQA model
+    #   shows the same 1.1e-3 under identical sharding, so the residual is
+    #   generic sharded-compilation reduction reordering, not the MoE
+    #   mapping — an expert-routing or psum bug would be O(0.1+)). This is
+    #   the correctness check for the expert-parallel shard_map path.
+    # * bf16 run, MEAN err < 0.01 (measured 0.0025) and argmax agreement
+    #   >= 0.97 (measured 0.992): bf16 hidden-state noise can flip a
+    #   borderline router top-k choice for isolated tokens, and a flipped
+    #   expert changes those logits by O(0.1) — so the bf16 MAX err is not
+    #   boundable tightly; the bulk statistics are.
     stdout = _run("""
+        import dataclasses
         import jax, jax.numpy as jnp
         from repro.configs import smoke_config
         from repro.launch import sharding as shd
         from repro.models import Model
 
-        cfg = smoke_config("deepseek-v2-236b")  # MLA + MoE(4 experts)
-        mesh = jax.make_mesh((2, 4), ("data", "model"))
-        model = Model(cfg, remat=False)
-        params = model.init(jax.random.PRNGKey(0))
-        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
-                                    cfg.vocab_size)
-        logits0, _ = model.forward(params, tokens)
+        def compare(dtype):
+            cfg = smoke_config("deepseek-v2-236b")  # MLA + MoE(4 experts)
+            cfg = dataclasses.replace(cfg, dtype=dtype)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            model = Model(cfg, remat=False)
+            params = model.init(jax.random.PRNGKey(0))
+            tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                        cfg.vocab_size)
+            logits0, _ = model.forward(params, tokens)
+            policy = shd.MeshPolicy(mesh, cfg)
+            p_shard = shd.param_shardings(jax.eval_shape(lambda: params),
+                                          mesh, cfg)
+            params_s = jax.device_put(params, p_shard)
+            fwd = jax.jit(lambda p, t: model.forward(p, t,
+                                                     policy=policy)[0],
+                          in_shardings=(p_shard, None))
+            logits1 = fwd(params_s, tokens)
+            d = jnp.abs(logits0.astype(jnp.float32)
+                        - logits1.astype(jnp.float32))
+            agree = jnp.mean((jnp.argmax(logits0, -1)
+                              == jnp.argmax(logits1, -1)).astype(
+                                  jnp.float32))
+            return float(jnp.max(d)), float(jnp.mean(d)), float(agree)
 
-        policy = shd.MeshPolicy(mesh, cfg)
-        p_shard = shd.param_shardings(jax.eval_shape(lambda: params),
-                                      mesh, cfg)
-        params_s = jax.device_put(params, p_shard)
-        fwd = jax.jit(lambda p, t: model.forward(p, t, policy=policy)[0],
-                      in_shardings=(p_shard, None))
-        logits1 = fwd(params_s, tokens)
-        err = float(jnp.max(jnp.abs(
-            logits0.astype(jnp.float32) - logits1.astype(jnp.float32))))
-        print("max err", err)
-        assert err < 0.08, err
+        mx32, mean32, _ = compare("float32")
+        print("f32 max err", mx32, "mean", mean32)
+        assert mx32 < 5e-3, mx32
+        mx16, mean16, agree16 = compare("bfloat16")
+        print("bf16 max err", mx16, "mean", mean16, "agree", agree16)
+        assert mean16 < 0.01, mean16
+        assert agree16 >= 0.97, agree16
         print("MOE_SHARDED_OK")
         """)
     assert "MOE_SHARDED_OK" in stdout
