@@ -1,12 +1,16 @@
 """Benchmark driver — one entry per paper table/figure.
 
 Prints a ``name,us_per_call,derived`` CSV summary at the end (us_per_call =
-benchmark wall time; derived = the benchmark's headline metric).
+benchmark wall time; derived = the benchmark's headline metric), and exits
+non-zero if any registered benchmark raised — a failing benchmark must not
+pass silently in CI.
 """
 
 from __future__ import annotations
 
+import sys
 import time
+import traceback
 
 
 def main() -> None:
@@ -15,20 +19,31 @@ def main() -> None:
     import benchmarks.orca_scheduling as orca_scheduling
     import benchmarks.serving_fig9 as serving_fig9
     import benchmarks.serving_fig10 as serving_fig10
+    import benchmarks.chunked_prefill_sweep as chunked_prefill_sweep
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
     import benchmarks.router_sweep as router_sweep
 
     csv_rows = []
+    failures = []
 
     def bench(name, fn, derive):
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
         t0 = time.monotonic()
-        out = fn()
+        try:
+            out = fn()
+        except Exception:
+            # record and continue: the remaining benchmarks still run, but
+            # the driver exits non-zero at the end
+            traceback.print_exc()
+            failures.append(name)
+            csv_rows.append((name, (time.monotonic() - t0) * 1e6, "FAILED"))
+            return None
         us = (time.monotonic() - t0) * 1e6
         try:
             derived = derive(out)
         except Exception:  # pragma: no cover - derived metric best-effort
+            traceback.print_exc()
             derived = "n/a"
         csv_rows.append((name, us, derived))
         return out
@@ -48,6 +63,10 @@ def main() -> None:
     bench("serving_fig10_distkv",
           lambda: serving_fig10.run(n_requests=200),
           lambda out: "max_gain=%.2fx" % max(r["gain"] for r in out))
+
+    bench("chunked_prefill_sweep (stall-free mixed batching)",
+          lambda: chunked_prefill_sweep.run(n_requests=220),
+          chunked_prefill_sweep.headline)
 
     bench("prefix_cache_sweep (radix KV reuse)",
           lambda: prefix_cache_sweep.run(n_requests=150),
@@ -70,6 +89,10 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.0f},{derived}")
+
+    if failures:
+        print(f"\nFAILED benchmarks: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

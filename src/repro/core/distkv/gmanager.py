@@ -36,14 +36,16 @@ class DebtEntry:
 
 
 class GManager:
-    def __init__(self, num_instances: int, *, safety_free: int = 2):
+    def __init__(self, num_instances: int, *, safety_free: int = 2,
+                 prefix_board_pages: Optional[int] = None):
         self.num_instances = num_instances
         self.free: Dict[int, int] = {i: 0 for i in range(num_instances)}
         self.total: Dict[int, int] = {i: 0 for i in range(num_instances)}
         self.ledger: List[DebtEntry] = []
         self.safety_free = safety_free  # blocks a creditor must keep local
-        # cross-instance prefix sharing: published hot radix paths
-        self.prefix_board = PrefixShareBoard()
+        # cross-instance prefix sharing: published hot radix paths,
+        # size-capped (LRU) — publications past the cap evict cold pages
+        self.prefix_board = PrefixShareBoard(max_pages=prefix_board_pages)
 
     # -- heartbeats -----------------------------------------------------------
     def heartbeat(self, hb: Heartbeat) -> None:

@@ -23,11 +23,24 @@ page, keyed by the page's token tuple — so lookup is the same page-aligned
 walk. This is the *copy* flavor of cross-instance sharing; serving the
 prefix remotely via borrowed rBlocks + DistAttention partial merges (no
 copy, per-token remote penalty) is the recorded alternative.
+
+Eviction. Published payloads are real memory on the coordinator (an engine
+page is per-layer K/V host arrays), so the board is **size-capped**:
+``max_pages`` bounds the resident page count and publishing past it evicts
+least-recently-used *leaf* pages first (a leaf-only policy keeps every
+surviving path intact, mirroring the radix cache's eviction). A lookup
+touches every page on its matched path, so hot prefixes stay resident while
+one-off publications age out. ``max_pages=None`` keeps the previous
+unbounded behavior. An evicted page may still be flagged ``published`` in
+its home instance's radix tree — it simply stops being adoptable (a
+graceful miss) until some instance's hot path crosses the threshold again
+and republishes it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
@@ -39,19 +52,28 @@ class PublishedPage:
     home: int
     children: Dict[Tuple[int, ...], "PublishedPage"] = \
         dataclasses.field(default_factory=dict)
+    parent: Optional["PublishedPage"] = None
+    last_access: int = 0
 
 
 class PrefixShareBoard:
-    """Global radix of published pages. Lives on the gManager."""
+    """Global radix of published pages. Lives on the gManager.
 
-    def __init__(self):
+    ``max_pages`` caps the resident page count (LRU leaf eviction on
+    publish); ``None`` = unbounded."""
+
+    def __init__(self, max_pages: Optional[int] = None):
         self._root = PublishedPage(key=(), payload=None, home=-1)
         self.page_size: Optional[int] = None
+        self.max_pages = max_pages
+        self._clock = 0
+        self.num_pages = 0
         # stats
         self.published_pages = 0
         self.publications = 0
         self.lookups = 0
         self.hit_pages = 0
+        self.evicted_pages = 0
 
     def publish(self, instance_id: int, tokens: Sequence[int],
                 payloads: Sequence[Any], page_size: int) -> int:
@@ -66,22 +88,27 @@ class PrefixShareBoard:
                 f"mixed page sizes on one board: {self.page_size} vs "
                 f"{page_size} — cross-instance pages must be interchangeable")
         node, new = self._root, 0
+        self._clock += 1
         for i in range(len(tokens) // page_size):
             key = tuple(tokens[i * page_size:(i + 1) * page_size])
             child = node.children.get(key)
             if child is None:
                 child = PublishedPage(key=key, payload=payloads[i],
-                                      home=instance_id)
+                                      home=instance_id, parent=node)
                 node.children[key] = child
                 new += 1
+                self.num_pages += 1
             elif child.payload is None and payloads[i] is not None:
                 # a bookkeeping-only publication (sim) upgraded with real
                 # page contents: engine adopters can now use the page
                 child.payload = payloads[i]
                 child.home = instance_id
+            child.last_access = self._clock
             node = child
         self.published_pages += new
         self.publications += 1
+        if self.max_pages is not None and self.num_pages > self.max_pages:
+            self._evict(self.num_pages - self.max_pages)
         return new
 
     def covered(self, tokens: Sequence[int]) -> int:
@@ -110,15 +137,51 @@ class PrefixShareBoard:
         limit = len(tokens) if max_tokens is None else \
             min(max_tokens, len(tokens))
         node, path = self._root, []
+        self._clock += 1
         for i in range(limit // ps):
             child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
             if child is None:
                 break
+            child.last_access = self._clock
             path.append(child)
             node = child
         self.lookups += 1
         self.hit_pages += len(path)
         return path
+
+    # -- eviction ---------------------------------------------------------------
+    def _evict(self, n: int) -> int:
+        """Drop ``n`` least-recently-used leaf pages (payloads freed with
+        them). Leaf-only eviction keeps every surviving root path intact;
+        evicting a leaf can expose its parent as the new oldest leaf, so a
+        min-heap over the dynamic leaf set implements strict LRU — a cold
+        path ages out tail-first until it is gone — in one tree walk plus
+        O(log) per drop, not a walk per dropped page."""
+        heap: List[Tuple[int, int, PublishedPage]] = []
+        seq = 0  # heap tiebreak: PublishedPage is not orderable
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for ch in node.children.values():
+                if ch.children:
+                    stack.append(ch)
+                else:
+                    heap.append((ch.last_access, seq, ch))
+                    seq += 1
+        heapq.heapify(heap)
+        dropped = 0
+        while dropped < n and heap:
+            _, _, leaf = heapq.heappop(heap)
+            parent = leaf.parent
+            del parent.children[leaf.key]
+            leaf.parent = None
+            self.num_pages -= 1
+            dropped += 1
+            if parent is not self._root and not parent.children:
+                heapq.heappush(heap, (parent.last_access, seq, parent))
+                seq += 1
+        self.evicted_pages += dropped
+        return dropped
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -126,4 +189,6 @@ class PrefixShareBoard:
             "publications": self.publications,
             "lookups": self.lookups,
             "hit_pages": self.hit_pages,
+            "resident_pages": self.num_pages,
+            "evicted_pages": self.evicted_pages,
         }

@@ -40,13 +40,24 @@ Lifecycle per request:
    candidates: a page a running request still references is never freed, and
    forgetting it would lose cache without reclaiming memory.
 
-Divergence from SGLang. SGLang's radix tree is *token-level*: nodes hold
-variable-length token runs and are split on partial matches, so a hit can end
-mid-page. Here matching is **page-aligned** (one node == one physical page)
-because the paged engine can only reuse whole physical blocks — a partial
-page would need a COW copy plus a partial recompute for no FLOP savings on
-the remainder. The trade is at most ``page_size - 1`` tokens of lost hit per
-request, in exchange for no node splitting and a 1:1 node/block mapping.
+Token-level matching (SGLang-style splitting, page-granular). SGLang's radix
+tree is *token-level*: nodes hold variable-length token runs and are split on
+partial matches, so a hit can end mid-page. Nodes here keep the 1:1
+node/block mapping (one node == one full physical page), but the *frontier*
+of a match is token-level: after the longest full-page walk,
+:meth:`match_partial` scans the last node's children for the one sharing the
+longest token run with the prompt's next page — up to ``page_size - 1``
+further cached tokens. The "split" is realized at admission as a
+**partial-page COW** instead of a tree mutation: the scheduler locks the
+partially-matched node into the request's block table with only the shared
+run counted as stored tokens, and the allocator's existing copy-on-write
+duplicates the physical page on the first suffix write (the node stays
+intact for requests continuing down its own branch). When the new request's
+prefill completes, its divergent boundary page is inserted as a sibling —
+the tree then holds both post-split branches, each backed by its own full
+page, which is exactly SGLang's post-split structure expressed in whole
+pages. Token-level matching is on by default (``token_level=False`` restores
+page-aligned-only hits).
 Cross-instance sharing. Every node carries a **hit counter** (bumped once
 per *committed* admission that reuses the node — neither routing-policy
 ``probe`` lookups nor failed admission retries count). A serving router can ask for the *hot* root paths
@@ -84,9 +95,13 @@ class RadixNode:
 
 class PrefixCache:
     def __init__(self, allocator: BlockAllocator,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None, *,
+                 token_level: bool = True):
         self.allocator = allocator
         self.page_size = page_size or allocator.block_size
+        # token-level frontier matching (SGLang-style): recover up to
+        # page_size - 1 tokens per hit past the last full-page match
+        self.token_level = token_level
         self.root = RadixNode(key=(), block=-1, parent=None)
         self._clock = 0
         self.num_pages = 0
@@ -135,6 +150,46 @@ class PrefixCache:
             path.append(child)
             node = child
         return path
+
+    def match_partial(self, tokens: Sequence[int],
+                      path: List[RadixNode], *,
+                      max_tokens: Optional[int] = None,
+                      probe: bool = False
+                      ) -> Optional[Tuple[RadixNode, int]]:
+        """Token-level frontier of a full-page :meth:`match`: the child of
+        the last matched node sharing the longest run of further tokens.
+
+        Returns ``(node, n_tokens)`` with ``1 <= n_tokens < page_size`` or
+        ``None``. The caller reuses the node's page for its first
+        ``n_tokens`` only — locking it into a block table with a partial
+        token count makes the allocator COW the page on the first suffix
+        write (the split-boundary copy), leaving the node's own branch
+        intact. Disabled with ``token_level=False``."""
+        if not self.token_level:
+            return None
+        ps = self.page_size
+        limit = len(tokens) if max_tokens is None else \
+            min(max_tokens, len(tokens))
+        done = len(path) * ps
+        rest = tokens[done:limit]
+        if not rest:
+            return None
+        node = path[-1] if path else self.root
+        best, best_run = None, 0
+        for key, child in node.children.items():
+            run = 0
+            stop = min(len(rest), len(key))
+            while run < stop and key[run] == rest[run]:
+                run += 1
+            if run > best_run:
+                best, best_run = child, run
+        if best is None or best_run >= ps:
+            # a full-page run would have been consumed by match() already;
+            # >= ps here would mean an inconsistent tree
+            return None
+        if not probe:
+            best.last_access = self._clock
+        return best, best_run
 
     # -- request lifecycle --------------------------------------------------------
     def lock(self, path: List[RadixNode]) -> List[int]:

@@ -1,4 +1,4 @@
 from repro.core.scheduling.request import Phase, Request  # noqa: F401
 from repro.core.scheduling.iteration import (  # noqa: F401
-    IterationPlan, IterationScheduler)
+    CHUNK_POLICIES, IterationPlan, IterationScheduler, PrefillChunk)
 from repro.core.scheduling.batch import BatchPlan, BatchScheduler  # noqa: F401

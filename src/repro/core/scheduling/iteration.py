@@ -1,26 +1,59 @@
-"""ORCA iteration-level scheduler (paper §III.B Sol1) with selective batching.
+"""ORCA iteration-level scheduler (paper §III.B Sol1) with selective batching
+and Sarathi-style chunked prefill.
 
-Each call to :meth:`schedule` plans exactly ONE engine iteration: which
-waiting requests to prefill (initiation phase) and which running requests to
-advance by one token (increment phase). Early-finished requests leave the
-batch immediately; late-joining requests enter at the next iteration — the
-exact fix for ORCA's challenge C1.
+Each call to :meth:`schedule` plans exactly ONE engine iteration as a single
+**token-budget batch composition**: ongoing decodes, prefill *chunks* of
+running requests, and new admissions all draw from one
+``max_tokens_per_iter`` budget. Early-finished requests leave the batch
+immediately; late-joining requests enter at the next iteration — the exact
+fix for ORCA's challenge C1.
+
+Chunked prefill. A prompt larger than the iteration budget used to run
+*solo* (stalling every running decode for the whole prefill). Now a request
+is admitted once and then contributes budget-sized **chunks** across
+successive iterations, tracked by ``Request.prefilled_len``: each iteration
+the request prefills ``min(remaining prompt, leftover budget)`` tokens,
+piggybacked with the ongoing decodes, and only the final chunk samples a
+token. ``chunk_policy`` picks who gets the budget first:
+
+* ``decode_first`` (default, Sarathi-style stall-free batching) — every
+  running decode is granted its token before any prefill work, so TBT stays
+  bounded by one budget-sized iteration;
+* ``prefill_first`` — chunk continuations and admissions take the budget
+  first and decodes run in the leftover (TTFT-optimal, decodes may stall
+  under sustained prefill pressure — the classic prefill-priority trade);
+* ``monolithic`` — no chunking: an over-budget prompt is admitted alongside
+  the running decodes and prefills in ONE iteration, stalling every decode
+  for the full prefill (the vLLM-default "solo prefill in the batch"
+  baseline the chunked benchmark measures against);
+* ``solo`` — the legacy stand-in policy: an over-budget prompt waits for an
+  otherwise-idle instance and then runs alone. Decodes never stall (none
+  are running), but the waiting prompt head-of-line-blocks every admission
+  behind it while decodes drain — the TTFT/throughput pathology.
 
 Selective batching (Sol2) shows up as the *token budget*: attention is
 per-sequence (paged cache), while MLP/linear layers run over the flattened
-token buffer, so the scheduler bounds ``sum(prompt lens) + #decodes`` per
+token buffer, so the scheduler bounds ``sum(chunk lens) + #decodes`` per
 iteration rather than the sequence count.
 
 Memory is delegated to a :class:`BlockAllocator` (vLLM §III.C) or any object
-with the same interface; preemption-by-recompute evicts the youngest request
-when pages run out (vLLM's recompute policy).
+with the same interface; a request's whole prompt worth of pages is reserved
+at admission (chunk continuations never allocate), and
+preemption-by-recompute evicts the youngest request when pages run out
+(vLLM's recompute policy) — including mid-prefill victims, whose
+``prefilled_len`` resets so recompute restarts chunking from the front.
 
 With a :class:`~repro.core.prefixcache.PrefixCache` attached, admission first
 matches the prompt against the radix tree: matched pages are locked into the
 request's block table (refcounted, no recompute) and only the *uncached
-suffix* is charged against the token budget; prompt pages are inserted into
-the tree as soon as prefill completes (and survive the request), and under
-page pressure LRU cache eviction runs before any preemption.
+suffix* is charged against the token budget — chunked exactly like a cold
+prompt when it exceeds the budget. With ``token_level`` matching the hit may
+end mid-page: the partially-matched node is locked with only the shared run
+counted as stored, and the allocator's copy-on-write duplicates the boundary
+page on the first suffix write (the SGLang split realized as a partial-page
+COW). Prompt pages are inserted into the tree as soon as prefill completes
+(and survive the request), and under page pressure LRU cache eviction runs
+before any preemption.
 
 ``prefix_importer`` extends the match across instances: before committing
 to a local match, admission offers the prompt to the importer (wired by a
@@ -38,25 +71,51 @@ from repro.core.paging.allocator import BlockAllocator, BlockTable
 from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.request import Phase, Request
 
+CHUNK_POLICIES = ("decode_first", "prefill_first", "monolithic", "solo")
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One iteration's slice of a request's prefill: compute prompt tokens
+    ``[start, start + length)`` at their absolute positions. ``start`` of the
+    first chunk is the cached-prefix length (which may be mid-page under
+    token-level matching)."""
+    req: Request
+    start: int
+    length: int
+
+    @property
+    def end(self) -> int:
+        return self.start + self.length
+
+    @property
+    def is_last(self) -> bool:
+        return self.end == self.req.prompt_len
+
 
 @dataclasses.dataclass
 class IterationPlan:
+    # requests whose FINAL prefill chunk runs this iteration: they produce
+    # first-token logits and enter decode next iteration. (Backends append
+    # COW-forked best-of-n children here after scheduling.)
     prefill: List[Request]
     decode: List[Request]
     preempted: List[Request]
     # copy-on-write block replacements this iteration: the engine must copy
     # each old physical page into its new page before any decode write
     cow: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # ALL prefill work this iteration (including the final chunks mirrored
+    # in ``prefill``): the execution backends run these in order
+    chunks: List[PrefillChunk] = dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
-        return not (self.prefill or self.decode)
+        return not (self.chunks or self.prefill or self.decode)
 
     def token_count(self) -> int:
         """Tokens through the flattened MLP buffer this iteration (cached
         prefix pages are read, not recomputed — they cost no prefill FLOPs)."""
-        return sum(r.prompt_len - r.num_cached_tokens
-                   for r in self.prefill) + len(self.decode)
+        return sum(c.length for c in self.chunks) + len(self.decode)
 
 
 class IterationScheduler:
@@ -67,8 +126,13 @@ class IterationScheduler:
                  prefix_cache: Optional[PrefixCache] = None,
                  max_preemptions: Optional[int] = None,
                  cache_generated: bool = True,
+                 chunk_policy: str = "decode_first",
+                 prefill_chunk_min: Optional[int] = None,
                  prefix_importer: Optional[
                      Callable[[Sequence[int], int], int]] = None):
+        if chunk_policy not in CHUNK_POLICIES:
+            raise ValueError(f"chunk_policy must be one of {CHUNK_POLICIES}, "
+                             f"got {chunk_policy!r}")
         self.allocator = allocator
         self.max_running = max_running
         self.max_tokens = max_tokens_per_iter
@@ -81,6 +145,15 @@ class IterationScheduler:
         # multi-turn follow-up resending the assistant reply hits the cache
         # beyond the prompt. Disable when outputs are placeholder ids (sim).
         self.cache_generated = cache_generated
+        self.chunk_policy = chunk_policy
+        # smallest first chunk worth ADMITTING a request on (degenerate
+        # slivers pay an iteration's fixed cost for a handful of tokens,
+        # and admitting on a sliver starts a prefill before a same-prefix
+        # predecessor could warm the radix tree). Continuations are exempt:
+        # an admitted request holds pages, so it always progresses. A final
+        # chunk smaller than this still runs — prompts end somewhere.
+        self.prefill_chunk_min = prefill_chunk_min \
+            if prefill_chunk_min is not None else allocator.block_size
         # cross-instance sharing hook: (prompt, locally_cached_tokens) ->
         # #pages adopted from a peer's publication into the local tree.
         # Admission re-matches after a successful import.
@@ -123,32 +196,81 @@ class IterationScheduler:
         if path:
             self.prefix_cache.release(path)
 
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens not yet prefilled: queued prompts plus the unfilled
+        remainder of running chunked prefills. A cluster router counts this
+        as load — an instance chewing through a 100k-token prompt is busier
+        than its request count suggests."""
+        backlog = sum(r.prompt_len for r in self.waiting)
+        backlog += sum(r.prompt_len - r.prefilled_len for r in self.running
+                       if r.prefilled_len < r.prompt_len)
+        return backlog
+
     # -- one iteration ------------------------------------------------------------
     def schedule(self) -> IterationPlan:
-        prefill: List[Request] = []
-        decode: List[Request] = []
-        preempted: List[Request] = []
-        cow: List[Tuple[int, int]] = []
-        budget = self.max_tokens
+        plan = IterationPlan(prefill=[], decode=[], preempted=[], cow=[],
+                             chunks=[])
+        self._budget = self.max_tokens
+        if self.chunk_policy == "prefill_first":
+            self._plan_continuations(plan)
+            self._plan_admissions(plan)
+            self._plan_decodes(plan)
+        else:  # decode_first (Sarathi stall-free) and legacy solo
+            self._plan_decodes(plan)
+            self._plan_continuations(plan)
+            self._plan_admissions(plan)
+        return plan
 
-        # 1) running decodes first (latency priority), preempting if needed
+    def _rescind(self, plan: IterationPlan, victim: Request) -> None:
+        """Remove work already planned this iteration for a preemption
+        victim (its pages are gone): a granted decode token, a prefill
+        chunk, or a pending COW copy must not reach the backend with a
+        freed block table. Must run BEFORE :meth:`_preempt` frees the
+        victim's table — the COW pairs are identified by their target
+        blocks, which the victim still owns."""
+        if victim in plan.decode:
+            plan.decode.remove(victim)
+            self._budget += 1
+        for c in [c for c in plan.chunks if c.req is victim]:
+            plan.chunks.remove(c)
+            self._budget += c.length
+        if victim in plan.prefill:
+            plan.prefill.remove(victim)
+        # COW targets are freshly-allocated blocks exclusively owned by the
+        # victim; once freed they can be REALLOCATED later this same
+        # schedule() call (admission, prefix adoption), so a stale pending
+        # copy would silently clobber the new owner's page contents
+        table = self.tables.get(victim.request_id)
+        if table is not None and plan.cow:
+            owned = set(table.blocks)
+            plan.cow[:] = [p for p in plan.cow if p[1] not in owned]
+
+    def _plan_decodes(self, plan: IterationPlan) -> None:
+        """Advance every running decode by one token (latency priority
+        within its budget slice), preempting under page pressure."""
+        # under prefill_first this runs AFTER the chunk planners: a request
+        # whose final chunk is planned this very iteration must not also be
+        # granted a decode token (it samples its first token from the
+        # prefill logits and enters decode NEXT iteration — otherwise a
+        # max_new_tokens=1 request would emit two tokens at once)
+        chunked_now = {c.req.request_id for c in plan.chunks}
         for req in list(self.running):
-            if budget <= 0:
+            if self._budget <= 0:
                 break
             if req.request_id not in self.tables:
                 continue  # became a preemption victim earlier this iteration
+            if req.prefilled_len < req.prompt_len or \
+                    req.request_id in chunked_now:
+                continue  # still prefilling / final chunk runs this iter
             table = self.tables[req.request_id]
             if not self.allocator.can_append(table, 1) and \
                     self.prefix_cache is not None:
                 # reclaim unreferenced cached pages before preempting anyone
                 self.prefix_cache.evict(self.allocator.blocks_needed(table, 1))
             if not self.allocator.can_append(table, 1):
-                victim = self._preempt_youngest(exclude=req)
-                if victim is not None and victim in decode:
-                    # victim was granted its decode token earlier this
-                    # iteration; rescind it (its pages are gone)
-                    decode.remove(victim)
-                    budget += 1
+                # _preempt_youngest rescinds the victim's already-planned
+                # work for this iteration before freeing its table
+                victim = self._preempt_youngest(exclude=req, plan=plan)
                 if victim is not None and self.prefix_cache is not None \
                         and not self.allocator.can_append(table, 1):
                     # the victim's prompt pages may survive only as
@@ -157,21 +279,50 @@ class IterationScheduler:
                     self.prefix_cache.evict(
                         self.allocator.blocks_needed(table, 1))
                 if victim is None or not self.allocator.can_append(table, 1):
-                    # preempt this request itself
+                    # preempt this request itself (rescind any of its own
+                    # planned work too — its block table is gone)
+                    self._rescind(plan, req)
                     self._preempt(req)
-                    preempted.append(req)
+                    plan.preempted.append(req)
                     continue
-                preempted.append(victim)
-            cow.extend(self.allocator.append_tokens(table, 1))
-            decode.append(req)
-            budget -= 1
+                plan.preempted.append(victim)
+            plan.cow.extend(self.allocator.append_tokens(table, 1))
+            plan.decode.append(req)
+            self._budget -= 1
 
-        # 2) admit waiting requests (FCFS) into leftover budget + memory
-        while (self.waiting and budget > 0
+    def _plan_continuations(self, plan: IterationPlan) -> None:
+        """Budget-sized prefill chunks for running requests admitted in an
+        earlier iteration whose prompt is not fully prefilled yet. No memory
+        is needed — the whole prompt's pages were reserved at admission."""
+        for req in list(self.running):
+            if self._budget <= 0:
+                break
+            if req.request_id not in self.tables:
+                continue
+            remaining = req.prompt_len - req.prefilled_len
+            if remaining <= 0:
+                continue
+            # no sliver guard here: the request already holds its pages, so
+            # stalling its continuation would waste memory to save an
+            # iteration's overhead — admission is where slivers are refused
+            n = min(remaining, self._budget)
+            plan.chunks.append(PrefillChunk(req, req.prefilled_len, n))
+            req.prefilled_len += n
+            if req.prefilled_len == req.prompt_len:
+                plan.prefill.append(req)
+            self._budget -= n
+
+    def _plan_admissions(self, plan: IterationPlan) -> None:
+        """Admit waiting requests (FCFS) into leftover budget + memory. The
+        whole prompt's pages are allocated up front; only the first chunk is
+        charged against this iteration's budget."""
+        while (self.waiting and self._budget > 0
                and len(self.running) < self.max_running):
             req = self.waiting[0]
             path: list = []
+            partial = None
             cached = 0
+            bs = self.allocator.block_size
             if self.prefix_cache is not None and \
                     len(req.prompt) == req.prompt_len:
                 # cap at prompt_len-1: the last prompt token must be computed
@@ -179,56 +330,72 @@ class IterationScheduler:
                 path = self.prefix_cache.match(req.prompt,
                                                max_tokens=req.prompt_len - 1)
                 if self.prefix_importer is not None and self.prefix_importer(
-                        req.prompt,
-                        len(path) * self.allocator.block_size) > 0:
+                        req.prompt, len(path) * bs) > 0:
                     # adopt-imported-pages path: a peer published pages
                     # extending our local match and they were just grafted
                     # into the local tree — re-match over them
                     path = self.prefix_cache.match(
                         req.prompt, max_tokens=req.prompt_len - 1)
-                cached = len(path) * self.allocator.block_size
+                partial = self.prefix_cache.match_partial(
+                    req.prompt, path, max_tokens=req.prompt_len - 1)
+                cached = len(path) * bs + (partial[1] if partial else 0)
             need_tokens = req.prompt_len - cached
-            if need_tokens > budget:
-                # chunked-prefill stand-in: a prompt larger than the whole
-                # iteration budget may run alone when the instance is
-                # otherwise idle — else huge prompts head-of-line-block
-                # forever (same policy as the DistKV simulator)
-                solo_ok = not decode and not prefill and \
-                    budget == self.max_tokens
-                if not solo_ok:
-                    break
+            if self.chunk_policy == "solo":
+                if need_tokens > self._budget:
+                    # legacy stand-in: a prompt larger than the whole
+                    # iteration budget may run alone when the instance is
+                    # otherwise idle — else huge prompts
+                    # head-of-line-block forever
+                    solo_ok = plan.empty and not plan.preempted and \
+                        self._budget == self.max_tokens
+                    if not solo_ok:
+                        break
+                first_chunk = need_tokens
+            elif self.chunk_policy == "monolithic":
+                # no chunking: the whole prompt prefills this iteration,
+                # right next to the running decodes (who all stall for it)
+                first_chunk = need_tokens
+            else:
+                if self._budget < min(need_tokens, self.prefill_chunk_min):
+                    break  # not worth starting a prefill on a sliver
+                first_chunk = min(need_tokens, self._budget)
             # lock before checking supply so eviction cannot claim the
-            # matched pages out from under us
+            # matched pages out from under us. A token-level partial hit
+            # locks the boundary node too: its page enters the table with
+            # only the shared run counted as stored, so the allocator COWs
+            # it on the first suffix write (the split-boundary copy).
             table = BlockTable()
-            if path:
-                table.blocks = self.prefix_cache.lock(path)
+            full_path = path + [partial[0]] if partial else path
+            if full_path:
+                table.blocks = self.prefix_cache.lock(full_path)
                 table.num_tokens = cached
-            short = (self.allocator.blocks_needed(table, need_tokens)
-                     - (self.allocator.num_free - self.watermark_blocks))
+            # +1 block when the shared boundary page will be COW-copied
+            needed = self.allocator.blocks_needed(table, need_tokens) + \
+                (1 if partial else 0)
+            short = needed - (self.allocator.num_free - self.watermark_blocks)
             if short > 0 and self.prefix_cache is not None:
                 self.prefix_cache.evict(short)
-            if (self.allocator.blocks_needed(table, need_tokens)
-                    > self.allocator.num_free - self.watermark_blocks):
-                if path:  # roll back the lock
-                    self.prefix_cache.release(path)
+            if needed > self.allocator.num_free - self.watermark_blocks:
+                if full_path:  # roll back the lock
+                    self.prefix_cache.release(full_path)
                     self.allocator.free_table(table)
                 break
             self.waiting.pop(0)
-            cow.extend(self.allocator.append_tokens(table, need_tokens))
+            plan.cow.extend(self.allocator.append_tokens(table, need_tokens))
             self.tables[req.request_id] = table
-            if path:
-                self._cache_paths[req.request_id] = path
+            if full_path:
+                self._cache_paths[req.request_id] = full_path
             req.num_cached_tokens = cached
             if self.prefix_cache is not None:
                 self.prefix_cache.record_admission(req.prompt_len, cached,
-                                                   path)
+                                                   full_path)
             req.phase = Phase.INITIATION
             self.running.append(req)
-            prefill.append(req)
-            budget -= need_tokens
-
-        return IterationPlan(prefill=prefill, decode=decode,
-                             preempted=preempted, cow=cow)
+            plan.chunks.append(PrefillChunk(req, cached, first_chunk))
+            req.prefilled_len = cached + first_chunk
+            if req.prefilled_len == req.prompt_len:
+                plan.prefill.append(req)
+            self._budget -= first_chunk
 
     def complete_iteration(self, plan: IterationPlan, now: float) -> List[Request]:
         """Mark phases + retire finished requests. Returns finished list."""
@@ -275,6 +442,7 @@ class IterationScheduler:
         child.prompt = list(parent.prompt)
         child.prompt_len = parent.prompt_len
         child.num_cached_tokens = parent.prompt_len  # nothing recomputed
+        child.prefilled_len = parent.prompt_len
         child.phase = Phase.INCREMENT
         self.running.append(child)
         return table
@@ -290,15 +458,20 @@ class IterationScheduler:
         req.committed_output.extend(req.output)
         req.output = []
         req.num_cached_tokens = 0  # re-matched at the next admission
+        req.prefilled_len = 0  # recompute restarts chunked prefill
         self._release_cache_path(req)
         self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:
             self.running.remove(req)
         self.waiting.insert(0, req)
 
-    def _preempt_youngest(self, exclude: Request) -> Optional[Request]:
+    def _preempt_youngest(self, exclude: Request,
+                          plan: Optional[IterationPlan] = None
+                          ) -> Optional[Request]:
         for req in reversed(self.running):
             if req is not exclude:
+                if plan is not None:
+                    self._rescind(plan, req)
                 self._preempt(req)
                 return req
         return None

@@ -35,9 +35,22 @@ class Request:
     # tokens generated before a preemption (they re-enter as prompt on
     # recompute but still belong to the client-visible output)
     committed_output: List[int] = dataclasses.field(default_factory=list)
+    # per-token log p(sampled token) aligned with ``full_output`` (the
+    # engine appends one entry per emitted token; the simulator leaves it
+    # empty — its outputs are placeholder ids)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    # chunked-prefill progress: prompt tokens whose KV exists (cached prefix
+    # + chunks computed so far). The request decodes only once this reaches
+    # ``prompt_len``; preemption resets it (recompute policy).
+    prefilled_len: int = 0
     first_token_time: Optional[float] = None
     scheduled_time: Optional[float] = None  # first admission into a plan
     finish_time: Optional[float] = None
+    # inter-token-gap tracking (stall observability): backend time of the
+    # most recent emitted token, and the worst gap between consecutive
+    # tokens — a decode stalled behind a long prefill shows up here
+    last_token_time: Optional[float] = None
+    max_tbt: float = 0.0
     # one of serving.api.FINISH_REASONS once finished
     finish_reason: Optional[str] = None
     preemptions: int = 0
@@ -69,6 +82,13 @@ class Request:
     @property
     def context_len(self) -> int:
         return self.prompt_len + self.n_generated
+
+    def record_token_time(self, now: float) -> None:
+        """Track the worst inter-token gap (backends call this once per
+        emitted token). The first token's gap is TTFT, tracked separately."""
+        if self.last_token_time is not None and now > self.last_token_time:
+            self.max_tbt = max(self.max_tbt, now - self.last_token_time)
+        self.last_token_time = now
 
     @property
     def stop_token_ids(self):

@@ -27,7 +27,8 @@ def build_instance(args):
         from repro.serving.simulator import SimBackend
         return SimBackend(num_blocks=args.pages, block_size=args.page_size,
                           max_running=args.slots,
-                          prefix_cache=args.prefix_cache)
+                          prefix_cache=args.prefix_cache,
+                          chunk_policy=args.chunk_policy)
     import jax
     from repro.models import Model
     from repro.serving.engine import EngineConfig, PagedEngine
@@ -37,7 +38,8 @@ def build_instance(args):
     return PagedEngine(cfg, params, EngineConfig(
         num_pages=args.pages, page_size=args.page_size,
         max_slots=args.slots, use_kernel=args.use_kernel,
-        enable_prefix_cache=args.prefix_cache))
+        enable_prefix_cache=args.prefix_cache,
+        chunk_policy=args.chunk_policy))
 
 
 def build_backend(args):
@@ -51,7 +53,8 @@ def build_backend(args):
     from repro.serving.router import RouterBackend
     children = [build_instance(args) for _ in range(args.instances)]
     return RouterBackend(children, policy=args.policy,
-                         prefix_share=args.prefix_share)
+                         prefix_share=args.prefix_share,
+                         board_pages=args.board_pages)
 
 
 def main():
@@ -76,6 +79,14 @@ def main():
                     help="Pallas paged-attention (interpret mode on CPU)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree prefix KV cache (cross-request reuse)")
+    from repro.core.scheduling import CHUNK_POLICIES
+    ap.add_argument("--chunk-policy", default="decode_first",
+                    choices=CHUNK_POLICIES,
+                    help="chunked-prefill budget policy: decode_first "
+                         "(Sarathi stall-free), prefill_first (TTFT-"
+                         "optimal), monolithic (whole prompt in one "
+                         "iteration next to the decodes), or solo (legacy: "
+                         "over-budget prompts wait for an idle engine)")
     ap.add_argument("--instances", type=int, default=1,
                     help="serving instances behind the cluster router "
                          "(1 = no router)")
@@ -87,6 +98,10 @@ def main():
                     help="publish hot radix paths through the distkv board "
                          "so instances adopt each other's cached prefixes "
                          "(needs --prefix-cache)")
+    ap.add_argument("--board-pages", type=int, default=None,
+                    help="size cap (pages) for the cross-instance "
+                         "publication board; LRU pages are evicted past it "
+                         "(default: unbounded)")
     args = ap.parse_args()
 
     backend = build_backend(args)
@@ -127,6 +142,10 @@ def main():
           f"{backend.iterations} iterations); "
           f"mean ttft {stats.mean_ttft * 1e3:.1f}ms, "
           f"mean norm-lat {stats.mean_normalized_latency:.3f}s/tok")
+    if stats.p99_tbt != float("inf"):
+        print(f"p99 worst inter-token gap {stats.p99_tbt * 1e3:.1f}ms, "
+              f"prefill stall {stats.prefill_stall_ms:.1f}ms "
+              f"(chunk policy: {args.chunk_policy})")
     if stats.prefix_hit_rate is not None:
         print(f"prefix-cache hit-rate {stats.prefix_hit_rate:.1%}")
     if stats.per_instance:

@@ -94,13 +94,17 @@ class CompletionChunk:
     finished: bool = False
     finish_reason: Optional[str] = None
     time: Optional[float] = None   # backend clock (None = wall-clock backend)
+    # per-token log p(token) aligned with token_ids, streamed incrementally;
+    # None when the backend does not score tokens (the cost-model simulator)
+    logprobs: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
 class RequestMetrics:
     arrival_time: float
     queue_time: Optional[float]    # arrival -> first scheduled
-    ttft: Optional[float]          # arrival -> first token
+    ttft: Optional[float]          # arrival -> first token (spans all
+    #                                prefill chunks of a chunked prefill)
     tbt: Optional[float]           # mean time between output tokens
     e2e: Optional[float]           # arrival -> finish
     normalized_latency: Optional[float]  # e2e / output tokens (Fig. 9 metric)
@@ -109,6 +113,11 @@ class RequestMetrics:
     # serving instance the request ran on (RouterBackend placement; None
     # under a single-backend service)
     instance_id: Optional[int] = None
+    # worst gap between consecutive output tokens: the stall a decode
+    # suffers when someone's prefill monopolizes an iteration
+    max_tbt: Optional[float] = None
+    # prefill-in-flight duration: first scheduled chunk -> first token
+    prefill_time: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +127,8 @@ class CompletionSample:
     token_ids: List[int]
     cumulative_logprob: float
     finish_reason: str
+    # per-token logprobs aligned with token_ids (None on the simulator)
+    token_logprobs: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -176,6 +187,13 @@ class ServiceStats:
     throughput_tokens_per_s: float = 0.0
     preemptions: int = 0
     prefix_hit_rate: Optional[float] = None
+    # P99 of per-request WORST inter-token gaps — the decode-stall tail
+    # chunked prefill targets (a solo long prefill dominates it)
+    p99_tbt: float = float("inf")
+    # mean excess of a request's worst gap over its own average gap, in ms:
+    # ~0 for an evenly-paced decode, large when decodes stall behind
+    # someone's prefill
+    prefill_stall_ms: float = 0.0
     # RouterBackend services: per-instance breakdown (requests placed,
     # iterations, load, cache stats), keyed by instance id
     per_instance: Optional[Dict[int, Dict]] = None
@@ -310,8 +328,14 @@ class LLMService:
                     continue
                 total = st.req.full_output
                 if len(total) > st.reported:
+                    # stream per-token logprobs with the tokens when the
+                    # backend scores them (req.logprobs stays aligned with
+                    # full_output across preemptions)
+                    lps = list(st.req.logprobs[st.reported:len(total)]) \
+                        if len(st.req.logprobs) == len(total) else None
                     chunks[rid] = CompletionChunk(
-                        rid, list(total[st.reported:]), len(total), time=tnow)
+                        rid, list(total[st.reported:]), len(total), time=tnow,
+                        logprobs=lps)
                     st.reported = len(total)
         for req in finished:
             st = self._live.get(req.request_id)
@@ -404,7 +428,9 @@ class LLMService:
             req = self._live[m].req
             samples.append(CompletionSample(
                 list(req.full_output), req.cumulative_logprob,
-                req.finish_reason or FINISH_LENGTH))
+                req.finish_reason or FINISH_LENGTH,
+                token_logprobs=list(req.logprobs)
+                if len(req.logprobs) == len(req.full_output) else None))
         samples.sort(key=lambda s: -s.cumulative_logprob)
         parent = self._live[parent_id].req
         best = samples[0]
@@ -446,6 +472,15 @@ class LLMService:
             s.mean_normalized_latency = sum(lats) / len(lats)
             s.p99_normalized_latency = lats[
                 min(len(lats) - 1, int(0.99 * len(lats)))]
+        worst = sorted(o.metrics.max_tbt for o in done
+                       if o.metrics.max_tbt is not None)
+        if worst:
+            s.p99_tbt = worst[min(len(worst) - 1, int(0.99 * len(worst)))]
+        stalls = [max(0.0, o.metrics.max_tbt - o.metrics.tbt) for o in done
+                  if o.metrics.max_tbt is not None
+                  and o.metrics.tbt is not None]
+        if stalls:
+            s.prefill_stall_ms = 1e3 * sum(stalls) / len(stalls)
         clk = self.backend.clock()
         if clk is not None:
             s.makespan = clk
@@ -477,9 +512,14 @@ def _metrics_of(req: Request) -> RequestMetrics:
             and req.total_generated > 1:
         tbt = (req.finish_time - req.first_token_time) / \
             (req.total_generated - 1)
+    prefill_time = None
+    if req.first_token_time is not None and req.scheduled_time is not None:
+        prefill_time = req.first_token_time - req.scheduled_time
     return RequestMetrics(
         arrival_time=req.arrival_time, queue_time=queue, ttft=ttft, tbt=tbt,
         e2e=e2e, normalized_latency=req.normalized_latency(),
         preemptions=req.preemptions,
         num_cached_tokens=req.num_cached_tokens,
-        instance_id=req.instance_id)
+        instance_id=req.instance_id,
+        max_tbt=req.max_tbt if req.total_generated > 1 else None,
+        prefill_time=prefill_time)

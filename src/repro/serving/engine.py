@@ -3,13 +3,21 @@ paged-attention kernel, on a real JAX model.
 
 Execution model per iteration (continuous batching):
 
-1. the :class:`IterationScheduler` plans prefills + decodes under the token
-   budget and page supply;
-2. admitted prompts are prefilled (flash path), their K/V scattered into the
-   **paged physical cache** through the request's block table; with
-   ``enable_prefix_cache`` a radix-tree hit skips the cached prefix entirely
-   and prefills only the suffix at its absolute RoPE positions
-   (``core.prefixcache``);
+1. the :class:`IterationScheduler` plans prefill *chunks* + decodes under
+   the token budget and page supply (Sarathi-style chunked prefill: a prompt
+   larger than the budget is admitted once and then contributes budget-sized
+   chunks across successive iterations, piggybacked with ongoing decodes —
+   ``EngineConfig.chunk_policy`` picks decode-first / prefill-first / the
+   legacy solo baseline);
+2. each planned chunk runs through one jitted ``_prefill_chunk_fn``: the
+   chunk's K/V is scattered into the **paged physical cache** at per-token
+   (page, offset) slots through the request's block table, and its queries
+   attend causally at absolute RoPE positions over every context page —
+   radix-cached prefix pages (``enable_prefix_cache``), chunks written in
+   earlier iterations, and the chunk itself. Only the final chunk samples a
+   token. Chunk starts need not be page-aligned, which is what lets a
+   token-level (mid-page) prefix-cache hit resume from an unaligned
+   boundary;
 3. all running sequences advance one token in a single batched decode step
    over fixed slots — attention reads scattered pages via the block table
    (``repro.kernels.paged_attention``; a pure-XLA reference path is the
@@ -89,6 +97,12 @@ class EngineConfig:
     # drop a request after this many preemptions (finish_reason
     # "preempted-dropped"); None = recompute forever
     max_preemptions: Optional[int] = None
+    # chunked-prefill budget policy: "decode_first" (Sarathi stall-free:
+    # running decodes get budget before prefill chunks), "prefill_first"
+    # (TTFT-optimal, decodes may stall), "monolithic" (no chunking: the
+    # whole prompt prefills in one iteration alongside the decodes), or
+    # "solo" (legacy: over-budget prompts wait for an idle engine)
+    chunk_policy: str = "decode_first"
 
 
 class PagedEngine:
@@ -115,7 +129,8 @@ class PagedEngine:
             self.allocator, max_running=ecfg.max_slots,
             max_tokens_per_iter=ecfg.max_tokens_per_iter,
             prefix_cache=self.prefix_cache,
-            max_preemptions=ecfg.max_preemptions)
+            max_preemptions=ecfg.max_preemptions,
+            chunk_policy=ecfg.chunk_policy)
         # block-table width: the real per-sequence context limit, not the
         # whole page supply — shrinks the (n, max_pages) host->device
         # transfer every decode step
@@ -137,44 +152,32 @@ class PagedEngine:
     # -- jitted model steps ----------------------------------------------------
 
     @partial(jax.jit, static_argnums=(0,))
-    def _prefill_fn(self, params, k_pages, v_pages, tokens, page_ids):
-        """tokens: (1, S); page_ids: (n_pages_for_S,) physical ids.
-        Returns (logits (V,), k_pages, v_pages)."""
-        cfg = self.cfg
-        s = tokens.shape[1]
-        logits, seeds = self.model.prefill(params, tokens, seq_capacity=s,
-                                           return_raw_kv=True)
-        kraw, vraw = seeds[0]  # single-segment: (L, 1, S, Hkv, Dh) full-length
-        ps = self.ecfg.page_size
-        npg = page_ids.shape[0]
-        pad = npg * ps - s
-        k = jnp.pad(kraw[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(vraw[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k = k.reshape(cfg.num_layers, npg, ps, cfg.num_kv_heads, cfg.head_dim)
-        v = v.reshape(cfg.num_layers, npg, ps, cfg.num_kv_heads, cfg.head_dim)
-        k_pages = k_pages.at[:, page_ids].set(k)
-        v_pages = v_pages.at[:, page_ids].set(v)
-        return logits[0], k_pages, v_pages
+    def _prefill_chunk_fn(self, params, k_pages, v_pages, tokens, page_ids,
+                          start):
+        """One prefill chunk at absolute positions ``[start, start+S)``.
 
-    @partial(jax.jit, static_argnums=(0,))
-    def _prefill_suffix_fn(self, params, k_pages, v_pages, tokens,
-                           prefix_ids, suffix_ids):
-        """Cached-prefix prefill: compute only the prompt *suffix*.
+        tokens: (1, S) chunk token ids; page_ids: (n,) physical pages
+        covering context positions ``[0, start+S)`` in order — radix-cached
+        prefix pages, pages written by earlier chunks, and the pages this
+        chunk lands in; start: () traced scalar, so chunk boundaries (and
+        token-level cache hits mid-page) need no recompilation. Each chunk
+        token's K/V is scattered to its (page, offset) slot, then the chunk
+        queries attend causally over every gathered context page — positions
+        beyond each query are masked, so stale contents past the chunk's end
+        are never read. Returns (logits (V,) of the last chunk position,
+        k_pages, v_pages); callers ignore the logits for non-final chunks.
 
-        tokens: (1, S) suffix token ids; prefix_ids: (n_pref,) physical pages
-        holding the radix-cached prefix KV (page-aligned, RoPE already applied
-        at absolute positions 0..C-1); suffix_ids: (n_suf,) pages for the
-        suffix. Suffix queries run at absolute positions C..C+S-1 and attend
-        over gathered prefix pages + themselves. Returns (logits (V,), pages).
+        Subsumes both whole-prompt prefill (start=0, one chunk) and the old
+        page-aligned cached-suffix prefill (start = cached tokens).
         """
         cfg = self.cfg
         ecfg = self.ecfg
         ps = ecfg.page_size
         s = tokens.shape[1]
-        c = prefix_ids.shape[0] * ps  # cached prefix length (page-aligned)
-        nsuf = suffix_ids.shape[0]
-        pad = nsuf * ps - s
-        positions = c + jnp.arange(s)
+        npg = page_ids.shape[0]
+        positions = start + jnp.arange(s)        # (s,) absolute
+        tok_pages = page_ids[positions // ps]    # (s,) physical page per tok
+        in_page = positions % ps
         seg = self.model.plan[0]
         p_seg = params["segments"][0]
         window = cfg.sliding_window if seg.attn_kind == "swa" else None
@@ -185,22 +188,15 @@ class PagedEngine:
             p_i, kp, vp = scanned  # kp/vp: (P+1, ps, Hkv, Dh)
 
             def attend(q, k, v):
-                # scatter the suffix K/V into its pages, gather the cached
-                # prefix pages, and attend over [prefix ++ suffix]
-                ksuf = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0))).reshape(
-                    nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
-                vsuf = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0))).reshape(
-                    nsuf, ps, cfg.num_kv_heads, cfg.head_dim)
-                kp2 = kp.at[suffix_ids].set(ksuf.astype(kp.dtype))
-                vp2 = vp.at[suffix_ids].set(vsuf.astype(vp.dtype))
-                kpre = kp2[prefix_ids].reshape(
-                    1, c, cfg.num_kv_heads, cfg.head_dim)
-                vpre = vp2[prefix_ids].reshape(
-                    1, c, cfg.num_kv_heads, cfg.head_dim)
-                kcat = jnp.concatenate([kpre.astype(k.dtype), k], axis=1)
-                vcat = jnp.concatenate([vpre.astype(v.dtype), v], axis=1)
-                ctx = blockwise_attention(q, kcat, vcat, causal=True,
-                                          window=window, q_offset=c)
+                kp2 = kp.at[tok_pages, in_page].set(k[0].astype(kp.dtype))
+                vp2 = vp.at[tok_pages, in_page].set(v[0].astype(vp.dtype))
+                kall = kp2[page_ids].reshape(
+                    1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
+                vall = vp2[page_ids].reshape(
+                    1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
+                ctx = blockwise_attention(q, kall.astype(k.dtype),
+                                          vall.astype(v.dtype), causal=True,
+                                          window=window, q_offset=start)
                 return ctx, (kp2, vp2)
 
             y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions, attend)
@@ -335,9 +331,12 @@ class PagedEngine:
         toks, lps = self._sample_rows(logits_row[None], [req])
         return int(toks[0]), float(lps[0])
 
-    def _emit(self, req: Request, slot: int, tok: int, lp: float) -> None:
+    def _emit(self, req: Request, slot: int, tok: int, lp: float,
+              now: float) -> None:
         req.output.append(tok)
         req.cumulative_logprob += lp
+        req.logprobs.append(lp)
+        req.record_token_time(now)
         self.last_token[slot] = tok
 
     # -- engine loop ------------------------------------------------------------
@@ -366,33 +365,28 @@ class PagedEngine:
             self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
             self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
 
-        # --- prefills (initiation phase) ---
+        # --- prefill chunks (initiation phase) ---
         forked: List[Request] = []
-        for req in plan.prefill:
-            slot = self.free_slots.pop()
-            self.slots[req.request_id] = slot
+        ps = self.ecfg.page_size
+        for ch in plan.chunks:
+            req = ch.req
+            if req.request_id not in self.slots:
+                # first chunk: claim the decode slot the request will keep
+                self.slots[req.request_id] = self.free_slots.pop()
+            slot = self.slots[req.request_id]
             if req.scheduled_time is None:
                 req.scheduled_time = now
             table = self.scheduler.tables[req.request_id]
-            cached = req.num_cached_tokens
-            if cached > 0:
-                # radix-cache hit: prefill only the uncached suffix at its
-                # absolute positions, reading the prefix KV from shared pages
-                n_pref = cached // self.ecfg.page_size
-                prefix_ids = jnp.asarray(table.blocks[:n_pref], jnp.int32)
-                suffix_ids = jnp.asarray(table.blocks[n_pref:], jnp.int32)
-                tokens = jnp.asarray(req.prompt[cached:], jnp.int32)[None]
-                logits, self.k_pages, self.v_pages = self._prefill_suffix_fn(
-                    self.params, self.k_pages, self.v_pages, tokens,
-                    prefix_ids, suffix_ids)
-            else:
-                page_ids = jnp.asarray(table.blocks, jnp.int32)
-                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, self.k_pages, self.v_pages = self._prefill_fn(
-                    self.params, self.k_pages, self.v_pages, tokens, page_ids)
-            tok, lp = self._sample_one(req, logits)
-            self._emit(req, slot, tok, lp)
-            forked.extend(self._fork_children(req, logits, now))
+            n_ctx_pages = -(-ch.end // ps)  # ceil: pages covering [0, end)
+            page_ids = jnp.asarray(table.blocks[:n_ctx_pages], jnp.int32)
+            tokens = jnp.asarray(req.prompt[ch.start:ch.end], jnp.int32)[None]
+            logits, self.k_pages, self.v_pages = self._prefill_chunk_fn(
+                self.params, self.k_pages, self.v_pages, tokens, page_ids,
+                jnp.int32(ch.start))
+            if ch.is_last:
+                tok, lp = self._sample_one(req, logits)
+                self._emit(req, slot, tok, lp, now)
+                forked.extend(self._fork_children(req, logits, now))
 
         # best-of-n children join the plan so completion/insertion sees them
         plan.prefill.extend(forked)
@@ -420,7 +414,8 @@ class PagedEngine:
             sampled, lps = self._sample_rows(logits, row_reqs)
             for req in decode_reqs:
                 slot = self.slots[req.request_id]
-                self._emit(req, slot, int(sampled[slot]), float(lps[slot]))
+                self._emit(req, slot, int(sampled[slot]), float(lps[slot]),
+                           now)
 
         finished = self.scheduler.complete_iteration(plan, now)
         for req in finished:
@@ -444,7 +439,7 @@ class PagedEngine:
                 child.scheduled_time = now
                 child.first_token_time = now
                 tok, lp = self._sample_one(child, logits)
-                self._emit(child, slot, tok, lp)
+                self._emit(child, slot, tok, lp, now)
                 forked.append(child)
             else:
                 # no slot free: fall back to an ordinary request (with the

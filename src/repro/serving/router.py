@@ -10,9 +10,10 @@ whole cluster exactly like a single instance.
 Placement is pluggable (``POLICIES``):
 
 * ``round_robin``     — cycle through instances (the classic baseline);
-* ``least_loaded``    — fewest queued+running requests, ties broken by most
-  free KV pages (a stand-in for the load heartbeats a real gManager
-  aggregates);
+* ``least_loaded``    — fewest queued+running requests, then the smallest
+  in-flight **prefill token backlog** (queued prompts + unprefilled
+  remainders of running chunked prefills), then most free KV pages (a
+  stand-in for the load heartbeats a real gManager aggregates);
 * ``prefix_affinity`` — probe every instance's radix tree for the longest
   cached match of the prompt and route to the best one (SGLang-style
   cache-aware routing); below a match threshold fall back to least-loaded
@@ -41,16 +42,22 @@ the single-engine contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.distkv.gmanager import GManager, Heartbeat
 from repro.core.scheduling.request import Request
 
 
-def _load_of(child) -> int:
-    """Queued + running requests on a child backend."""
+def _load_of(child) -> Tuple[int, int]:
+    """Load of a child backend, lexicographic: (queued + running requests,
+    prefill backlog tokens). The second component counts **in-flight prefill
+    work** — queued prompts plus the unprefilled remainder of running
+    chunked prefills — so an instance grinding through a 100k-token prompt
+    ranks busier than a peer with the same request count serving chats."""
     sched = child.scheduler
-    return len(sched.waiting) + len(sched.running)
+    backlog = sched.prefill_backlog_tokens() \
+        if hasattr(sched, "prefill_backlog_tokens") else 0
+    return (len(sched.waiting) + len(sched.running), backlog)
 
 
 def _free_pages_of(child) -> int:
@@ -72,7 +79,8 @@ class RoundRobinPolicy:
 
 
 class LeastLoadedPolicy:
-    """Fewest queued+running requests; ties go to the most free KV pages."""
+    """Fewest queued+running requests, then smallest in-flight prefill
+    token backlog; remaining ties go to the most free KV pages."""
 
     name = "least_loaded"
 
@@ -160,6 +168,7 @@ class RouterBackend:
                  policy: Union[str, object] = "round_robin",
                  prefix_share: bool = False,
                  hot_threshold: int = 1,
+                 board_pages: Optional[int] = None,
                  gmanager: Optional[GManager] = None):
         if not children:
             raise ValueError("RouterBackend needs at least one child backend")
@@ -168,7 +177,10 @@ class RouterBackend:
             policy
         self.prefix_share = prefix_share
         self.hot_threshold = hot_threshold
-        self.g = gmanager or GManager(len(self.children))
+        # board_pages: size cap for the publication board (LRU page
+        # eviction) — ignored when an explicit gmanager is supplied
+        self.g = gmanager or GManager(len(self.children),
+                                      prefix_board_pages=board_pages)
         self.requests_placed: List[int] = [0] * len(self.children)
         self._placement: Dict[int, int] = {}  # request id -> instance
         # last-seen prefix_cache.hit_tokens per child: hot-path publication

@@ -50,6 +50,18 @@ class CostModel:
         return (self.t_fixed + self.c_token * n_tokens +
                 self.c_ctx * sum_ctx + self.c_remote * sum_remote_ctx)
 
+    @staticmethod
+    def prefill_read_tokens(start: int, length: int) -> int:
+        """Attention KV reads of one prefill chunk computing prompt tokens
+        ``[start, start+length)``: every chunk token reads the ``start``
+        tokens already in the cache (earlier chunks / radix-cached prefix)
+        plus its causal predecessors within the chunk. Charged via ``c_ctx``
+        like decode reads, so N chunks of a prompt cost the same attention
+        total as one monolithic prefill (start=0, length=P: P*(P-1)/2) —
+        chunking only adds per-iteration ``t_fixed``, which is the real
+        hardware trade."""
+        return length * start + length * (length - 1) // 2
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -65,6 +77,20 @@ class SimResult:
     # multi-instance router runs: per-instance breakdown + adopted pages
     per_instance: Optional[Dict[int, Dict]] = None
     adopted_pages: int = 0
+
+    @property
+    def max_tbts(self) -> np.ndarray:
+        """Per-request worst inter-token gap (>= 2 tokens emitted) — the
+        decode-stall metric chunked prefill targets."""
+        return np.array([r.max_tbt for r in self.finished
+                         if r.total_generated >= 2])
+
+    @property
+    def p99_tbt(self) -> float:
+        """P99 of per-request worst inter-token gaps: a decode stalled
+        behind a solo long prefill dominates this tail."""
+        ts = self.max_tbts
+        return float(np.percentile(ts, 99)) if len(ts) else float("inf")
 
     @property
     def finished(self) -> List[Request]:
@@ -235,6 +261,7 @@ class SimBackend:
                  max_running: int = 256, max_tokens_per_iter: int = 8192,
                  prefix_cache: bool = False,
                  max_preemptions: Optional[int] = None,
+                 chunk_policy: str = "decode_first",
                  cost: Optional[CostModel] = None):
         self.cost = cost or CostModel()
         self.allocator = BlockAllocator(num_blocks, block_size)
@@ -244,6 +271,7 @@ class SimBackend:
             self.allocator, max_running=max_running,
             max_tokens_per_iter=max_tokens_per_iter,
             prefix_cache=self.prefix_cache, max_preemptions=max_preemptions,
+            chunk_policy=chunk_policy,
             # sim outputs are placeholder ids — adopting them into the radix
             # tree would cache meaningless pages
             cache_generated=False)
@@ -280,10 +308,19 @@ class SimBackend:
             return self.scheduler.complete_iteration(plan, self._now) \
                 if plan.preempted else []
         sum_ctx = sum(r.context_len for r in plan.decode)
+        # per-chunk cost: chunk tokens read the KV already written by the
+        # cached prefix and earlier chunks (see prefill_read_tokens)
+        sum_ctx += sum(self.cost.prefill_read_tokens(c.start, c.length)
+                       for c in plan.chunks)
         self._now += self.cost.iteration_time(plan.token_count(), sum_ctx)
-        # simulate generation: each scheduled request emits one token
+        for c in plan.chunks:  # prefill-in-flight: admission time
+            if c.req.scheduled_time is None:
+                c.req.scheduled_time = self._now
+        # simulate generation: each request whose final chunk or decode ran
+        # emits one token (mid-prefill requests emit nothing yet)
         for r in plan.prefill + plan.decode:
             r.output.append(0)
+            r.record_token_time(self._now)
             if r.first_token_time is None:
                 r.first_token_time = self._now
             if r.scheduled_time is None:
@@ -307,19 +344,24 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    block_size: int = 16, max_running: int = 256,
                    max_tokens_per_iter: int = 8192,
                    prefix_cache: bool = False,
+                   chunk_policy: str = "decode_first",
                    cost: Optional[CostModel] = None) -> SimResult:
     """Replay ``requests`` through :class:`SimBackend` behind the LLMService
     front-end (one drive loop for engine and simulator alike).
 
     ``prefix_cache``: attach a radix-tree prefix KV cache — admission
     charges only the uncached prompt suffix (requests need real token ids,
-    e.g. from :func:`make_shared_prefix_workload`)."""
+    e.g. from :func:`make_shared_prefix_workload`).
+    ``chunk_policy``: chunked-prefill budget policy (``decode_first`` |
+    ``prefill_first`` | ``monolithic`` | legacy ``solo``), see
+    :class:`~repro.core.scheduling.iteration.IterationScheduler`."""
     from repro.serving.api import LLMService  # late: api imports Request
 
     backend = SimBackend(num_blocks=num_blocks, block_size=block_size,
                          max_running=max_running,
                          max_tokens_per_iter=max_tokens_per_iter,
-                         prefix_cache=prefix_cache, cost=cost)
+                         prefix_cache=prefix_cache,
+                         chunk_policy=chunk_policy, cost=cost)
     svc = LLMService(backend)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -339,10 +381,12 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                     prefix_cache: bool = True,
                     prefix_share: bool = False,
                     hot_threshold: int = 1,
+                    board_pages: Optional[int] = None,
                     blocks_per_instance: int = 1800, block_size: int = 16,
                     max_running: int = 64,
                     max_tokens_per_iter: int = 8192,
                     max_preemptions: Optional[int] = None,
+                    chunk_policy: str = "decode_first",
                     cost: Optional[CostModel] = None) -> SimResult:
     """Virtual-clock cluster sim: N :class:`SimBackend` instances behind a
     :class:`~repro.serving.router.RouterBackend`, driven to completion
@@ -361,11 +405,13 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                            block_size=block_size, max_running=max_running,
                            max_tokens_per_iter=max_tokens_per_iter,
                            prefix_cache=prefix_cache,
-                           max_preemptions=max_preemptions, cost=cost)
+                           max_preemptions=max_preemptions,
+                           chunk_policy=chunk_policy, cost=cost)
                 for _ in range(n_instances)]
     router = RouterBackend(children, policy=policy,
                            prefix_share=prefix_share,
-                           hot_threshold=hot_threshold)
+                           hot_threshold=hot_threshold,
+                           board_pages=board_pages)
     svc = LLMService(router)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -428,7 +474,8 @@ def simulate_prealloc(requests: Sequence[Request], *, total_slots: int,
                 continue
             break
         n_tok = sum(r.prompt_len for r in prefill) + len(decode)
-        sum_ctx = sum(r.context_len for r in decode)
+        sum_ctx = sum(r.context_len for r in decode) + \
+            sum(cost.prefill_read_tokens(0, r.prompt_len) for r in prefill)
         now += cost.iteration_time(n_tok, sum_ctx)
         for r in prefill + decode:
             r.output.append(0)
@@ -471,7 +518,9 @@ def simulate_batch_level(requests: Sequence[Request], *, max_batch: int = 32,
         batch = plan.batch
         n_iters = max(r.max_new_tokens for r in batch)
         # prefill iteration
-        now += cost.iteration_time(sum(r.prompt_len for r in batch), 0)
+        now += cost.iteration_time(
+            sum(r.prompt_len for r in batch),
+            sum(cost.prefill_read_tokens(0, r.prompt_len) for r in batch))
         for it in range(n_iters):
             live_ctx = sum(min(r.context_len + 1, r.prompt_len +
                                r.max_new_tokens) for r in batch)
@@ -623,7 +672,9 @@ def simulate_distkv(requests: Sequence[Request], *, n_instances: int = 4,
                 budget -= req.prompt_len
             if not decode and not prefill:
                 continue
-            sum_ctx = sum(r.context_len for r in decode)
+            sum_ctx = sum(r.context_len for r in decode) + \
+                sum(cost.prefill_read_tokens(0, r.prompt_len)
+                    for r in prefill)
             remote_ctx = sum(int(r.context_len *
                                  kv.remote_fraction(r.request_id))
                              for r in decode)

@@ -118,3 +118,87 @@ def test_empty_shard_does_not_nan():
     valid = jnp.zeros((b, s), bool)  # shard holds nothing valid
     o, m, l = micro_attention_partial(q, k, v, valid)
     assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.all(l == 0))
+
+
+# -- publication-board eviction (size-capped LRU) -------------------------------
+
+def _publish_path(board, base, n_pages, ps=4, inst=0):
+    toks = [base * 1000 + i for i in range(n_pages * ps)]
+    board.publish(inst, toks, [f"payload-{base}-{i}" for i in range(n_pages)],
+                  ps)
+    return toks
+
+
+def test_board_eviction_caps_resident_pages():
+    from repro.core.distkv.prefixshare import PrefixShareBoard
+    board = PrefixShareBoard(max_pages=4)
+    a = _publish_path(board, 1, 2)
+    b = _publish_path(board, 2, 2)
+    assert board.num_pages == 4
+    c = _publish_path(board, 3, 2)  # over cap: the LRU path (a) ages out
+    assert board.num_pages == 4
+    assert board.evicted_pages == 2
+    assert len(board.match(a)) == 0, "LRU path must be gone"
+    assert len(board.match(b)) == 2 and len(board.match(c)) == 2
+
+
+def test_board_eviction_lru_respects_lookups():
+    from repro.core.distkv.prefixshare import PrefixShareBoard
+    board = PrefixShareBoard(max_pages=4)
+    a = _publish_path(board, 1, 2)
+    b = _publish_path(board, 2, 2)
+    board.match(a)  # touch a: b becomes the LRU victim
+    _publish_path(board, 3, 2)
+    assert len(board.match(a)) == 2, "hot path must survive"
+    assert len(board.match(b)) == 0
+
+
+def test_board_eviction_keeps_surviving_paths_intact():
+    """Leaf-only eviction: a long path shrinks from its tail, never from
+    the middle — every surviving prefix stays matchable."""
+    from repro.core.distkv.prefixshare import PrefixShareBoard
+    board = PrefixShareBoard(max_pages=3)
+    long_path = _publish_path(board, 1, 5)  # 5 pages -> 2 tail pages evicted
+    assert board.num_pages == 3
+    assert len(board.match(long_path)) == 3
+    assert board.stats()["resident_pages"] == 3
+
+
+def test_board_unbounded_by_default():
+    from repro.core.distkv.prefixshare import PrefixShareBoard
+    board = PrefixShareBoard()
+    for i in range(30):
+        _publish_path(board, i, 2)
+    assert board.num_pages == 60 and board.evicted_pages == 0
+
+
+def test_router_board_cap_end_to_end():
+    """A cluster with a small board cap still completes and adopts
+    cross-instance prefixes, the cap is actually plumbed through
+    RouterBackend -> GManager -> PrefixShareBoard, and the board never
+    exceeds it (evicting once the hot groups outgrow it)."""
+    from repro.serving.api import LLMService
+    from repro.serving.router import RouterBackend
+    from repro.serving.simulator import (SimBackend,
+                                         make_shared_prefix_workload)
+    reqs = make_shared_prefix_workload(60, rate=60.0, n_groups=6,
+                                       prefix_len=96, suffix_len=16,
+                                       out_len=16, seed=5,
+                                       group_draw="random")
+    children = [SimBackend(num_blocks=400, block_size=16, prefix_cache=True)
+                for _ in range(3)]
+    router = RouterBackend(children, policy="round_robin",
+                           prefix_share=True, board_pages=8)
+    board = router.g.prefix_board
+    assert board.max_pages == 8, "cap must reach the board"
+    svc = LLMService(router)
+    for r in sorted(reqs, key=lambda r: r.arrival_time):
+        svc.submit_request(r)
+    svc.drain()
+    stats = svc.stats()
+    assert stats.completed_frac == 1.0
+    # 6 hot groups x 6 prefix pages overflow the 8-page cap: eviction ran
+    # and the cap held, yet peers still adopted published pages
+    assert board.num_pages <= 8
+    assert board.evicted_pages > 0
+    assert router.prefix_cache.adopted_pages > 0

@@ -379,11 +379,11 @@ def test_suffix_prefill_logits_match_full_prefill(model_setup):
     assert plan.prefill == [r2]
     assert r2.num_cached_tokens == 2 * PS
     table = eng.scheduler.tables[r2.request_id]
-    suffix_logits, _, _ = eng._prefill_suffix_fn(
+    cached = r2.num_cached_tokens
+    suffix_logits, _, _ = eng._prefill_chunk_fn(
         eng.params, eng.k_pages, eng.v_pages,
-        jnp.asarray(prompt[2 * PS:], jnp.int32)[None],
-        jnp.asarray(table.blocks[:2], jnp.int32),
-        jnp.asarray(table.blocks[2:], jnp.int32))
+        jnp.asarray(prompt[cached:], jnp.int32)[None],
+        jnp.asarray(table.blocks, jnp.int32), jnp.int32(cached))
     np.testing.assert_allclose(np.asarray(suffix_logits),
                                np.asarray(full_logits), rtol=2e-4, atol=2e-4)
 
