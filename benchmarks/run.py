@@ -23,6 +23,7 @@ def main() -> None:
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
     import benchmarks.router_sweep as router_sweep
+    import benchmarks.zero_copy_sweep as zero_copy_sweep
 
     csv_rows = []
     failures = []
@@ -76,6 +77,11 @@ def main() -> None:
     bench("router_sweep (cluster placement policies)",
           lambda: router_sweep.run(n_requests=160),
           router_sweep.headline)
+
+    bench("zero_copy_sweep (copy vs borrowed-rBlock prefix serving)",
+          lambda: zero_copy_sweep.run(n_requests=160,
+                                      out_lens=(16, 96, 256)),
+          zero_copy_sweep.headline)
 
     bench("orca_iteration_vs_batch",
           orca_scheduling.run,

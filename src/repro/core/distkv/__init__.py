@@ -1,7 +1,9 @@
 from repro.core.distkv.gmanager import GManager, Heartbeat, DebtEntry  # noqa: F401
+from repro.core.distkv.netmodel import NetworkModel  # noqa: F401
 from repro.core.distkv.prefixshare import (  # noqa: F401
     PrefixShareBoard, PublishedPage)
-from repro.core.distkv.rmanager import RManager, RBlock, SeqKV  # noqa: F401
+from repro.core.distkv.rmanager import (  # noqa: F401
+    RManager, RBlock, RemoteLease, SeqKV)
 from repro.core.distkv.dist_attention import (  # noqa: F401
-    dist_attention, dist_attention_ref, micro_attention_partial,
-    merge_partials, merge_partials_tree)
+    attention_partial, dist_attention, dist_attention_ref,
+    micro_attention_partial, merge_partials, merge_partials_tree)

@@ -27,27 +27,16 @@ from repro.compat import shard_map
 
 
 def micro_attention_partial(q, k, v, valid, *, scale: Optional[float] = None):
-    """Shard-local Micro Attention.
+    """Shard-local Micro Attention (single-query view of
+    :func:`attention_partial`).
 
     q: (B, H, Dh); k, v: (B, S_local, Hkv, Dh); valid: (B, S_local) bool.
     Returns (o_unnorm (B,H,Dh) fp32, m (B,H), l (B,H)) — un-normalized
     weighted values plus the local softmax statistics.
     """
-    b, h, dh = q.shape
-    hkv = k.shape[2]
-    g = h // hkv
-    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
-    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
-    m = jnp.max(s, axis=-1)  # (b,hkv,g)
-    # all-masked shards: exp(-inf - -inf) would NaN; clamp m
-    m_safe = jnp.maximum(m, -1e30)
-    p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(valid[:, None, None, :], p, 0.0)
-    l = p.sum(-1)
-    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
-    return (o.reshape(b, h, dh), m_safe.reshape(b, h), l.reshape(b, h))
+    o, m, l = attention_partial(q[:, None], k, v, valid[:, None, :],
+                                scale=scale)
+    return o[:, 0], m[:, 0], l[:, 0]
 
 
 def merge_partials(o, m, l, axis_name: str):
@@ -60,6 +49,34 @@ def merge_partials(o, m, l, axis_name: str):
     l_glob = lax.psum(l * corr, axis_name)
     o_glob = lax.psum(o * corr[..., None], axis_name)
     return o_glob / jnp.maximum(l_glob, 1e-9)[..., None]
+
+
+def attention_partial(q, k, v, mask, *, scale: Optional[float] = None):
+    """Masked multi-query Micro Attention partial (the ``T > 1`` sibling of
+    :func:`micro_attention_partial`, with a per-query mask).
+
+    q: (B, T, H, Dh); k, v: (B, S, Hkv, Dh); mask: (B, T, S) bool — entry
+    ``[b, t, s]`` says query ``t`` may attend key ``s`` (causality and
+    validity folded into one mask by the caller). Returns
+    ``(o_unnorm (B,T,H,Dh) fp32, m (B,T,H), l (B,T,H))`` ready for
+    :func:`merge_partials_tree` — the pieces the engine's zero-copy paths
+    merge across local pages and pages borrowed from a peer instance.
+    """
+    b, t, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qg = q.reshape(b, t, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bthgs", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)  # (b,t,hkv,g)
+    m_safe = jnp.maximum(m, -1e30)  # fully-masked queries must not NaN
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    l = p.sum(-1)
+    o = jnp.einsum("bthgs,bshd->bthgd", p, v.astype(jnp.float32))
+    return (o.reshape(b, t, h, dh), m_safe.reshape(b, t, h),
+            l.reshape(b, t, h))
 
 
 def merge_partials_tree(os, ms, ls):

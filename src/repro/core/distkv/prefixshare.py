@@ -41,15 +41,21 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 
 @dataclasses.dataclass
 class PublishedPage:
-    """One published page: token key, opaque KV payload, home instance."""
+    """One published page: token key, opaque KV payload, home instance.
+
+    ``block`` is the physical page id on the home instance — the handle a
+    peer needs to *borrow* the page (zero-copy rBlock serving) instead of
+    copying its payload. ``None`` when the publisher did not offer its pages
+    for lending (copy-only sharing)."""
     key: Tuple[int, ...]
     payload: Any
     home: int
+    block: Optional[int] = None
     children: Dict[Tuple[int, ...], "PublishedPage"] = \
         dataclasses.field(default_factory=dict)
     parent: Optional["PublishedPage"] = None
@@ -66,6 +72,14 @@ class PrefixShareBoard:
         self._root = PublishedPage(key=(), payload=None, home=-1)
         self.page_size: Optional[int] = None
         self.max_pages = max_pages
+        # zero-copy lending hooks, set by the cluster router when borrowed
+        # rBlock serving is enabled: ``on_pin(home, block)`` fires when a
+        # page's home block becomes referenced by the board (the router
+        # increfs it on the home allocator so neither the home's cache
+        # eviction nor request teardown can free a lendable page);
+        # ``on_unpin`` fires when board eviction drops the page.
+        self.on_pin: Optional[Callable[[int, int], None]] = None
+        self.on_unpin: Optional[Callable[[int, int], None]] = None
         self._clock = 0
         self.num_pages = 0
         # stats
@@ -76,11 +90,15 @@ class PrefixShareBoard:
         self.evicted_pages = 0
 
     def publish(self, instance_id: int, tokens: Sequence[int],
-                payloads: Sequence[Any], page_size: int) -> int:
+                payloads: Sequence[Any], page_size: int,
+                blocks: Optional[Sequence[int]] = None) -> int:
         """Publish a page-aligned path: page ``i`` holds
         ``tokens[i*ps:(i+1)*ps]`` with KV contents ``payloads[i]``.
         Pages already on the board are kept (first publisher wins — the
-        payloads are equivalent by construction). Returns #pages added."""
+        payloads are equivalent by construction). ``blocks`` (optional)
+        offers the publisher's physical page ids for zero-copy lending;
+        each newly-recorded block is pinned via :attr:`on_pin`. Returns
+        #pages added."""
         if self.page_size is None:
             self.page_size = page_size
         elif self.page_size != page_size:
@@ -91,6 +109,7 @@ class PrefixShareBoard:
         self._clock += 1
         for i in range(len(tokens) // page_size):
             key = tuple(tokens[i * page_size:(i + 1) * page_size])
+            block = blocks[i] if blocks is not None else None
             child = node.children.get(key)
             if child is None:
                 child = PublishedPage(key=key, payload=payloads[i],
@@ -100,9 +119,21 @@ class PrefixShareBoard:
                 self.num_pages += 1
             elif child.payload is None and payloads[i] is not None:
                 # a bookkeeping-only publication (sim) upgraded with real
-                # page contents: engine adopters can now use the page
+                # page contents: engine adopters can now use the page. The
+                # lendable block moves with the new home — unpin the old
+                # lender's page first so its pin is returned.
+                if child.block is not None and self.on_unpin is not None:
+                    self.on_unpin(child.home, child.block)
+                child.block = None
                 child.payload = payloads[i]
                 child.home = instance_id
+            if block is not None and child.block is None \
+                    and child.home == instance_id:
+                # the home offers this page for lending: pin it so the home
+                # side cannot free a block a peer may borrow
+                child.block = block
+                if self.on_pin is not None:
+                    self.on_pin(child.home, block)
             child.last_access = self._clock
             node = child
         self.published_pages += new
@@ -175,6 +206,10 @@ class PrefixShareBoard:
             parent = leaf.parent
             del parent.children[leaf.key]
             leaf.parent = None
+            if leaf.block is not None and self.on_unpin is not None:
+                # return the lending pin: the home may free the page again
+                # (outstanding leases hold their own references)
+                self.on_unpin(leaf.home, leaf.block)
             self.num_pages -= 1
             dropped += 1
             if parent is not self._root and not parent.children:

@@ -12,7 +12,7 @@ lives, merged by log-sum-exp.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.distkv.gmanager import GManager, Heartbeat
 from repro.core.paging.allocator import BlockAllocator, OutOfBlocks
@@ -25,6 +25,61 @@ class RBlock:
     instance_id: int  # owning (home) instance of the *sequence*
     device_id: int    # instance where the physical block lives
     physical_id: int
+
+
+@dataclasses.dataclass
+class RemoteLease:
+    """A borrowed page-aligned KV prefix: rBlocks whose physical pages live
+    on a *creditor* instance and are served in place (zero-copy) through the
+    DistAttention partial merge, instead of having their payloads copied.
+
+    The debtor's scheduler holds the lease for the lifetime of the borrowing
+    request; :meth:`release` repays the creditor (one ``decref`` + ledger
+    repayment per block). ``acquire`` refcounts the lease so a COW-forked
+    best-of-n sibling can share its parent's borrowed prefix — the creditor
+    is repaid exactly once, when the last holder releases."""
+
+    home: int                 # creditor instance the pages live on
+    debtor: int
+    blocks: List[int]         # physical page ids on the creditor
+    page_size: int
+    _release: Optional[Callable[["RemoteLease"], None]] = None
+    _on_commit: Optional[Callable[["RemoteLease"], None]] = None
+    _refs: int = 1
+    committed: bool = False
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.blocks) * self.page_size
+
+    def acquire(self) -> "RemoteLease":
+        if self._refs <= 0:
+            raise ValueError("acquire of a released lease")
+        self._refs += 1
+        return self
+
+    def commit(self) -> None:
+        """Called by the scheduler when an admission actually lands with
+        this lease. An adopter may be asked (and borrow) every scheduling
+        retry of a request that cannot fit yet — stats/charges hooked here
+        instead of at grant time count served prefixes, not retries."""
+        if not self.committed:
+            self.committed = True
+            if self._on_commit is not None:
+                self._on_commit(self)
+
+    def release(self) -> None:
+        """Repay the creditor once the last holder lets go. Idempotent past
+        zero so double-release in teardown paths cannot double-repay."""
+        if self._refs <= 0:
+            return
+        self._refs -= 1
+        if self._refs == 0 and self._release is not None:
+            self._release(self)
 
 
 @dataclasses.dataclass
@@ -63,10 +118,44 @@ class RManager:
         self.heartbeat()
         return b
 
+    def lend_blocks(self, debtor: int, blocks: List[int]) -> None:
+        """Lend *specific existing* local pages (e.g. radix-cached prefix
+        pages) to ``debtor``: one extra reference per block, so neither the
+        local cache's eviction nor a local ``free_table`` can return a lent
+        page to the free list while the debtor reads it. Raises ValueError
+        (before touching the ledger) if any block is not live."""
+        for b in blocks:
+            if self.allocator.refcount_of(b) == 0:
+                raise ValueError(
+                    f"instance {self.instance_id}: cannot lend free block "
+                    f"{b} — only live pages are lendable")
+        for b in blocks:
+            self.allocator.incref(b)
+        self.g.record_loan(self.instance_id, debtor, len(blocks))
+        self.heartbeat()
+
     def repay(self, creditor: int, physical_id: int) -> None:
         self.peers[creditor].allocator.decref(physical_id)
         self.g.record_repayment(creditor, self.instance_id, 1)
         self.peers[creditor].heartbeat()
+
+    # -- zero-copy prefix leases ---------------------------------------------------
+    def borrow_blocks(self, home: int, blocks: List[int]) -> RemoteLease:
+        """Borrow specific pages living on ``home`` as a zero-copy prefix
+        lease. The lease's :meth:`RemoteLease.release` repays through this
+        (debtor) rManager."""
+        if home == self.instance_id:
+            raise ValueError("borrowing from oneself — serve locally instead")
+        self.peers[home].lend_blocks(self.instance_id, blocks)
+
+        def _repay(lease: RemoteLease) -> None:
+            for b in lease.blocks:
+                self.repay(lease.home, b)
+
+        return RemoteLease(home=home, debtor=self.instance_id,
+                           blocks=list(blocks),
+                           page_size=self.allocator.block_size,
+                           _release=_repay)
 
     # -- borrowing side -----------------------------------------------------------
     def _alloc_one(self) -> RBlock:
@@ -101,26 +190,35 @@ class RManager:
                 rb = self._alloc_one()
                 added.append(rb)
         except OutOfBlocks:
-            for rb in added:  # roll back
-                if rb.device_id == self.instance_id:
-                    self.allocator.decref(rb.physical_id)
-                else:
-                    self.repay(rb.device_id, rb.physical_id)
+            self._return_rblocks(added)  # roll back
             self.heartbeat()
             raise
         kv.rblocks.extend(added)
         kv.num_tokens = total
         return added
 
+    def _return_rblocks(self, rblocks: List[RBlock]) -> None:
+        """Give back a set of rBlocks, **creditors first**: remote blocks
+        are repaid before any local page is freed, so a fault in the local
+        teardown (e.g. a double-free surfacing as ValueError mid-loop) can
+        never strand a creditor's lent block — the debt side is settled by
+        the time local state is touched. This is the invariant the
+        debtor-preemption path relies on."""
+        for rb in rblocks:
+            if rb.device_id != self.instance_id:
+                self.repay(rb.device_id, rb.physical_id)
+        for rb in rblocks:
+            if rb.device_id == self.instance_id:
+                self.allocator.decref(rb.physical_id)
+
     def free_seq(self, seq_id: int) -> None:
+        """Free a sequence's rBlocks (request finish OR preemption of a
+        debtor). Remote repayments run before local frees — see
+        :meth:`_return_rblocks`."""
         kv = self.seqs.pop(seq_id, None)
         if kv is None:
             return
-        for rb in kv.rblocks:
-            if rb.device_id == self.instance_id:
-                self.allocator.decref(rb.physical_id)
-            else:
-                self.repay(rb.device_id, rb.physical_id)
+        self._return_rblocks(kv.rblocks)
         self.heartbeat()
 
     # -- cross-instance prefix sharing -------------------------------------------

@@ -60,6 +60,16 @@ to a local match, admission offers the prompt to the importer (wired by a
 cluster router to the distkv publication board), which may *adopt* pages a
 peer instance published into the local tree — the admission then re-matches
 and prefills only the suffix past the imported prefix.
+
+``remote_adopter`` is the zero-copy alternative: instead of copying
+payloads, it may return a :class:`~repro.core.distkv.rmanager.RemoteLease`
+— borrowed rBlocks whose pages stay on the creditor instance. The request
+is then admitted with only its *suffix* pages local (positions
+``[0, lease.num_tokens)`` are served remotely through the DistAttention
+partial merge), the lease is held for the request's lifetime, and release
+(finish or preemption) repays the creditor **before** any local page is
+freed. Leased prompts are never inserted into the local radix tree — their
+leading pages do not exist here.
 """
 
 from __future__ import annotations
@@ -127,9 +137,12 @@ class IterationScheduler:
                  max_preemptions: Optional[int] = None,
                  cache_generated: bool = True,
                  chunk_policy: str = "decode_first",
+                 decode_reserve: bool = True,
                  prefill_chunk_min: Optional[int] = None,
                  prefix_importer: Optional[
-                     Callable[[Sequence[int], int], int]] = None):
+                     Callable[[Sequence[int], int], int]] = None,
+                 remote_adopter: Optional[
+                     Callable[[Request, int], Optional[object]]] = None):
         if chunk_policy not in CHUNK_POLICIES:
             raise ValueError(f"chunk_policy must be one of {CHUNK_POLICIES}, "
                              f"got {chunk_policy!r}")
@@ -146,6 +159,11 @@ class IterationScheduler:
         # beyond the prompt. Disable when outputs are placeholder ids (sim).
         self.cache_generated = cache_generated
         self.chunk_policy = chunk_policy
+        # prefill_first only: set aside the pages this iteration's decode
+        # grants will need BEFORE admissions run (admission-before-decode
+        # could otherwise admit a request the same iteration's decode growth
+        # then preempts). False restores the old racy behavior (tests).
+        self.decode_reserve = decode_reserve
         # smallest first chunk worth ADMITTING a request on (degenerate
         # slivers pay an iteration's fixed cost for a handful of tokens,
         # and admitting on a sliver starts a prefill before a same-prefix
@@ -158,10 +176,20 @@ class IterationScheduler:
         # #pages adopted from a peer's publication into the local tree.
         # Admission re-matches after a successful import.
         self.prefix_importer = prefix_importer
+        # zero-copy sharing hook: (request, locally_cached_tokens) -> a
+        # RemoteLease of borrowed rBlocks strictly longer than the local
+        # match, or None. Tried BEFORE the copy importer; when a lease is
+        # granted the copy path is skipped for this admission.
+        self.remote_adopter = remote_adopter
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
         self._cache_paths: Dict[int, list] = {}  # request id -> locked nodes
+        # outstanding zero-copy prefix leases by request id (shared by
+        # COW-forked siblings via lease.acquire)
+        self.leases: Dict[int, object] = {}
+        # prefill_first decode-page reserve (see schedule())
+        self._decode_reserve = 0
 
     # -- client API -------------------------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -174,6 +202,12 @@ class IterationScheduler:
         req.finish_time = now
         req.finish_reason = reason or req.finish_reason_if_done \
             or req.finish_reason
+        # repay the creditor of a zero-copy prefix lease FIRST: the debt
+        # side must be settled before any local teardown can fault, so a
+        # creditor never leaks a lent block
+        lease = self.leases.pop(req.request_id, None)
+        if lease is not None:
+            lease.release()
         if req.request_id in self.tables:
             table = self.tables[req.request_id]
             # adopt the *generated* tokens' full pages too (the prompt pages
@@ -181,8 +215,11 @@ class IterationScheduler:
             # that resends this reply as history then hits past the prompt.
             # KV exists for the first num_tokens context tokens — the final
             # sampled token was never fed back, so its page may be partial.
+            # A leased request's local pages cover only its suffix (the
+            # leading positions live on the creditor), so there is no valid
+            # root path to insert.
             if self.prefix_cache is not None and self.cache_generated \
-                    and len(req.prompt) == req.prompt_len:
+                    and len(req.prompt) == req.prompt_len and lease is None:
                 toks = (req.prompt + req.output)[:table.num_tokens]
                 self.prefix_cache.insert(toks, table.blocks)
             # the tree's increfs keep adopted pages alive past free_table
@@ -206,14 +243,35 @@ class IterationScheduler:
                        if r.prefilled_len < r.prompt_len)
         return backlog
 
+    def remote_tokens_of(self, request_id: int) -> int:
+        """Leading context tokens served from a creditor instance's pages
+        under a zero-copy lease (0 = fully local). Execution backends use
+        this to split attention into local + remote partials."""
+        lease = self.leases.get(request_id)
+        return lease.num_tokens if lease is not None else 0
+
     # -- one iteration ------------------------------------------------------------
     def schedule(self) -> IterationPlan:
         plan = IterationPlan(prefill=[], decode=[], preempted=[], cow=[],
                              chunks=[])
         self._budget = self.max_tokens
         if self.chunk_policy == "prefill_first":
+            # decode-page reserve: admissions run BEFORE the decode planner
+            # here, so without a reserve an admission can take the very page
+            # a running decode needs this same iteration — the decode then
+            # preempts someone (possibly the fresh admission) it just made
+            # room for. Set aside the pages this iteration's decode grants
+            # will allocate before admitting anyone. (Conservative: a decode
+            # later denied by the token budget still reserved its page.)
+            self._decode_reserve = sum(
+                self.allocator.blocks_needed(self.tables[r.request_id], 1)
+                for r in self.running
+                if r.request_id in self.tables
+                and r.prefilled_len >= r.prompt_len) \
+                if self.decode_reserve else 0
             self._plan_continuations(plan)
             self._plan_admissions(plan)
+            self._decode_reserve = 0
             self._plan_decodes(plan)
         else:  # decode_first (Sarathi stall-free) and legacy solo
             self._plan_decodes(plan)
@@ -321,6 +379,7 @@ class IterationScheduler:
             req = self.waiting[0]
             path: list = []
             partial = None
+            lease = None
             cached = 0
             bs = self.allocator.block_size
             if self.prefix_cache is not None and \
@@ -329,16 +388,30 @@ class IterationScheduler:
                 # for the first-token logits even if fully cached
                 path = self.prefix_cache.match(req.prompt,
                                                max_tokens=req.prompt_len - 1)
-                if self.prefix_importer is not None and self.prefix_importer(
-                        req.prompt, len(path) * bs) > 0:
-                    # adopt-imported-pages path: a peer published pages
-                    # extending our local match and they were just grafted
-                    # into the local tree — re-match over them
-                    path = self.prefix_cache.match(
-                        req.prompt, max_tokens=req.prompt_len - 1)
-                partial = self.prefix_cache.match_partial(
-                    req.prompt, path, max_tokens=req.prompt_len - 1)
-                cached = len(path) * bs + (partial[1] if partial else 0)
+                cached = len(path) * bs
+                if self.remote_adopter is not None:
+                    lease = self.remote_adopter(req, cached)
+                    if lease is not None and lease.num_tokens <= cached:
+                        lease.release()  # not longer than the local match
+                        lease = None
+                if lease is not None:
+                    # zero-copy admission: positions [0, lease.num_tokens)
+                    # are served from the creditor's pages through the
+                    # DistAttention merge — no local path is locked and only
+                    # the suffix needs local pages
+                    path = []
+                    cached = lease.num_tokens
+                else:
+                    if self.prefix_importer is not None and \
+                            self.prefix_importer(req.prompt, cached) > 0:
+                        # adopt-imported-pages path: a peer published pages
+                        # extending our local match and they were just
+                        # grafted into the local tree — re-match over them
+                        path = self.prefix_cache.match(
+                            req.prompt, max_tokens=req.prompt_len - 1)
+                    partial = self.prefix_cache.match_partial(
+                        req.prompt, path, max_tokens=req.prompt_len - 1)
+                    cached = len(path) * bs + (partial[1] if partial else 0)
             need_tokens = req.prompt_len - cached
             if self.chunk_policy == "solo":
                 if need_tokens > self._budget:
@@ -349,6 +422,8 @@ class IterationScheduler:
                     solo_ok = plan.empty and not plan.preempted and \
                         self._budget == self.max_tokens
                     if not solo_ok:
+                        if lease is not None:
+                            lease.release()
                         break
                 first_chunk = need_tokens
             elif self.chunk_policy == "monolithic":
@@ -357,6 +432,8 @@ class IterationScheduler:
                 first_chunk = need_tokens
             else:
                 if self._budget < min(need_tokens, self.prefill_chunk_min):
+                    if lease is not None:
+                        lease.release()
                     break  # not worth starting a prefill on a sliver
                 first_chunk = min(need_tokens, self._budget)
             # lock before checking supply so eviction cannot claim the
@@ -369,20 +446,31 @@ class IterationScheduler:
             if full_path:
                 table.blocks = self.prefix_cache.lock(full_path)
                 table.num_tokens = cached
-            # +1 block when the shared boundary page will be COW-copied
+            # +1 block when the shared boundary page will be COW-copied;
+            # the free-page bar excludes the prefill_first decode reserve
             needed = self.allocator.blocks_needed(table, need_tokens) + \
                 (1 if partial else 0)
-            short = needed - (self.allocator.num_free - self.watermark_blocks)
-            if short > 0 and self.prefix_cache is not None:
-                self.prefix_cache.evict(short)
-            if needed > self.allocator.num_free - self.watermark_blocks:
+            avail = self.allocator.num_free - self.watermark_blocks - \
+                self._decode_reserve
+            if needed > avail and self.prefix_cache is not None:
+                self.prefix_cache.evict(needed - avail)
+                avail = self.allocator.num_free - self.watermark_blocks - \
+                    self._decode_reserve
+            if needed > avail:
                 if full_path:  # roll back the lock
                     self.prefix_cache.release(full_path)
                     self.allocator.free_table(table)
+                if lease is not None:
+                    lease.release()
                 break
             self.waiting.pop(0)
             plan.cow.extend(self.allocator.append_tokens(table, need_tokens))
             self.tables[req.request_id] = table
+            if lease is not None:
+                self.leases[req.request_id] = lease
+                commit = getattr(lease, "commit", None)
+                if commit is not None:  # stats/charges fire on commit only
+                    commit()
             if full_path:
                 self._cache_paths[req.request_id] = full_path
             req.num_cached_tokens = cached
@@ -407,10 +495,13 @@ class IterationScheduler:
             # adopt the prompt's full pages into the radix tree as soon as
             # their KV exists — waiting for request completion would make
             # every member of a same-prefix burst recompute the shared
-            # prefix (thundering herd)
+            # prefix (thundering herd). A leased request's local pages hold
+            # only its suffix (the leading positions live on the creditor
+            # instance), so there is nothing page-0-aligned to insert.
             if self.prefix_cache is not None and \
                     len(req.prompt) == req.prompt_len and \
-                    req.request_id in self.tables:
+                    req.request_id in self.tables and \
+                    req.request_id not in self.leases:
                 self.prefix_cache.insert(
                     req.prompt, self.tables[req.request_id].blocks)
         for req in plan.prefill + plan.decode:
@@ -439,6 +530,12 @@ class IterationScheduler:
         parent's prefill logits."""
         table = self.allocator.fork(self.tables[parent.request_id])
         self.tables[child.request_id] = table
+        lease = self.leases.get(parent.request_id)
+        if lease is not None:
+            # the sibling reads the same borrowed prefix: share the lease
+            # (refcounted — the creditor is repaid when the last holder
+            # releases)
+            self.leases[child.request_id] = lease.acquire()
         child.prompt = list(parent.prompt)
         child.prompt_len = parent.prompt_len
         child.num_cached_tokens = parent.prompt_len  # nothing recomputed
@@ -459,6 +556,11 @@ class IterationScheduler:
         req.output = []
         req.num_cached_tokens = 0  # re-matched at the next admission
         req.prefilled_len = 0  # recompute restarts chunked prefill
+        # debtor preemption: repay the creditor of a borrowed prefix BEFORE
+        # freeing any local page (re-admission may take a fresh lease)
+        lease = self.leases.pop(req.request_id, None)
+        if lease is not None:
+            lease.release()
         self._release_cache_path(req)
         self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:

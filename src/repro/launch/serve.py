@@ -22,13 +22,25 @@ from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.serving.api import LLMService, SamplingParams
 
 
+def build_netmodel(args):
+    # no --net-gbps: network accounting stays off for copy AND zero_copy
+    # alike (an asymmetric default would bias their comparison); only
+    # share-mode auto forces a model, since its decision needs one
+    if args.net_gbps is None and args.share_mode != "auto":
+        return None
+    from repro.core.distkv.netmodel import NetworkModel
+    return NetworkModel(gbps=args.net_gbps) if args.net_gbps is not None \
+        else NetworkModel()
+
+
 def build_instance(args):
     if args.backend == "sim":
         from repro.serving.simulator import SimBackend
         return SimBackend(num_blocks=args.pages, block_size=args.page_size,
                           max_running=args.slots,
                           prefix_cache=args.prefix_cache,
-                          chunk_policy=args.chunk_policy)
+                          chunk_policy=args.chunk_policy,
+                          net=build_netmodel(args))
     import jax
     from repro.models import Model
     from repro.serving.engine import EngineConfig, PagedEngine
@@ -48,13 +60,18 @@ def build_backend(args):
     if args.prefix_share and args.instances <= 1:
         raise SystemExit("--prefix-share requires --instances >= 2 "
                          "(there is no peer to share with)")
+    if args.share_mode != "copy" and not args.prefix_share:
+        raise SystemExit("--share-mode zero_copy/auto requires "
+                         "--prefix-share")
     if args.instances <= 1:
         return build_instance(args)
     from repro.serving.router import RouterBackend
     children = [build_instance(args) for _ in range(args.instances)]
     return RouterBackend(children, policy=args.policy,
                          prefix_share=args.prefix_share,
-                         board_pages=args.board_pages)
+                         share_mode=args.share_mode,
+                         board_pages=args.board_pages,
+                         net=build_netmodel(args))
 
 
 def main():
@@ -102,6 +119,18 @@ def main():
                     help="size cap (pages) for the cross-instance "
                          "publication board; LRU pages are evicted past it "
                          "(default: unbounded)")
+    from repro.serving.router import SHARE_MODES
+    ap.add_argument("--share-mode", default="copy", choices=SHARE_MODES,
+                    help="how a published prefix reaches a peer instance: "
+                         "copy its page payloads once, zero_copy serve it "
+                         "in place over borrowed rBlocks (DistAttention "
+                         "partial merge), or auto (per-request network-"
+                         "cost decision)")
+    ap.add_argument("--net-gbps", type=float, default=None,
+                    help="interconnect bandwidth for the network cost "
+                         "model (sim backend charges payload copies and "
+                         "lease RPCs; default: no network accounting, "
+                         "except share-mode auto which needs the model)")
     args = ap.parse_args()
 
     backend = build_backend(args)
@@ -148,6 +177,10 @@ def main():
               f"(chunk policy: {args.chunk_policy})")
     if stats.prefix_hit_rate is not None:
         print(f"prefix-cache hit-rate {stats.prefix_hit_rate:.1%}")
+    if getattr(backend, "pages_borrowed", 0):
+        print(f"zero-copy: {backend.leases_granted} leases, "
+              f"{backend.pages_borrowed} pages served remotely "
+              f"(share mode: {args.share_mode})")
     if stats.per_instance:
         for i, row in sorted(stats.per_instance.items()):
             extra = ""

@@ -63,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
+from repro.core.distkv.dist_attention import (attention_partial,
+                                              merge_partials_tree)
 from repro.core.paging.allocator import BlockAllocator, BlockTable
 from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.iteration import IterationScheduler
@@ -73,6 +75,16 @@ from repro.models import sampling
 from repro.models.layers import embed, rms_norm, unembed
 from repro.models.attention import blockwise_attention, gqa_layer
 from repro.serving.api import SamplingParams
+
+
+def _pow2_bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two >= n (>= floor): jit shape buckets, so a mixed
+    chunk-length workload compiles O(log) variants instead of one per
+    (chunk_len, n_pages) pair."""
+    p = floor
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass
@@ -148,36 +160,67 @@ class PagedEngine:
         self._sample_fn = jax.jit(sampling.sample_batch)
         # best-of-n children awaiting their parent's prefill (COW fork)
         self._pending_forks: Dict[int, List[Request]] = {}
+        # zero-copy cluster serving: reader(home_instance) -> (k_pages,
+        # v_pages) of the creditor engine's pools, wired by RouterBackend
+        # when borrowed-rBlock serving is enabled
+        self.remote_reader = None
+        # per-lease gathered creditor K/V (immutable while leased)
+        self._lease_kv_cache: Dict[int, tuple] = {}
+        # modeled network seconds (payload copies / lease RPCs) — a
+        # wall-clock engine cannot advance time, so observability only
+        self.net_time = 0.0
+        self._window = cfg.sliding_window \
+            if self.model.plan[0].attn_kind == "swa" else None
 
     # -- jitted model steps ----------------------------------------------------
 
     @partial(jax.jit, static_argnums=(0,))
     def _prefill_chunk_fn(self, params, k_pages, v_pages, tokens, page_ids,
-                          start):
-        """One prefill chunk at absolute positions ``[start, start+S)``.
+                          start, length, r_base, rk, rv):
+        """One prefill chunk at absolute positions ``[start, start+length)``.
 
-        tokens: (1, S) chunk token ids; page_ids: (n,) physical pages
-        covering context positions ``[0, start+S)`` in order — radix-cached
-        prefix pages, pages written by earlier chunks, and the pages this
-        chunk lands in; start: () traced scalar, so chunk boundaries (and
-        token-level cache hits mid-page) need no recompilation. Each chunk
-        token's K/V is scattered to its (page, offset) slot, then the chunk
-        queries attend causally over every gathered context page — positions
-        beyond each query are masked, so stale contents past the chunk's end
-        are never read. Returns (logits (V,) of the last chunk position,
-        k_pages, v_pages); callers ignore the logits for non-final chunks.
+        tokens: (1, S) chunk token ids padded to a power-of-two bucket
+        (positions past ``length`` are pad: their K/V scatters to the trash
+        page and their outputs are discarded); page_ids: (n,) physical pages
+        — also pow2-padded with the trash page — covering *local* context
+        positions ``[r_base, start+length)`` in order: radix-cached prefix
+        pages, pages written by earlier chunks, and the pages this chunk
+        lands in. ``start`` / ``length`` / ``r_base`` are traced scalars, so
+        chunk boundaries (and token-level cache hits mid-page) recompile
+        only per shape *bucket* — a mixed-length workload compiles O(log)
+        variants, not one per (chunk_len, n_pages) pair. Each chunk token's
+        K/V is scattered to its (page, offset) slot, then the chunk queries
+        attend causally over every gathered context page — positions beyond
+        each query are masked, so stale contents past the chunk's end (and
+        the pad pages, which sit at even higher positions) are never read.
 
-        Subsumes both whole-prompt prefill (start=0, one chunk) and the old
-        page-aligned cached-suffix prefill (start = cached tokens).
+        Zero-copy remote prefix: ``rk``/``rv`` (L, R, Hkv, Dh) carry the
+        borrowed pages' K/V (gathered from the creditor instance's pools),
+        serving absolute positions ``[0, r_base)``; the local causal partial
+        and the remote partial are combined with the DistAttention
+        log-sum-exp merge. ``R = 0`` (the common case) keeps the original
+        single-softmax path bit-for-bit.
+
+        Returns (logits (V,) of the last real chunk position, k_pages,
+        v_pages); callers ignore the logits for non-final chunks. Subsumes
+        whole-prompt prefill (start=0, one chunk) and cached-suffix prefill
+        (start = cached tokens).
         """
         cfg = self.cfg
         ecfg = self.ecfg
         ps = ecfg.page_size
         s = tokens.shape[1]
         npg = page_ids.shape[0]
+        n_remote = rk.shape[1]
         positions = start + jnp.arange(s)        # (s,) absolute
-        tok_pages = page_ids[positions // ps]    # (s,) physical page per tok
-        in_page = positions % ps
+        valid_tok = jnp.arange(s) < length
+        loc_pos = positions - r_base             # position within local pages
+        # pad tokens park their writes on the trash page, like inactive
+        # decode slots — real pages never see pad K/V
+        tok_pages = jnp.where(
+            valid_tok, page_ids[jnp.clip(loc_pos // ps, 0, npg - 1)],
+            ecfg.num_pages)
+        in_page = loc_pos % ps
         seg = self.model.plan[0]
         p_seg = params["segments"][0]
         window = cfg.sliding_window if seg.attn_kind == "swa" else None
@@ -185,7 +228,8 @@ class PagedEngine:
 
         def layer(carry, scanned):
             xx, = carry
-            p_i, kp, vp = scanned  # kp/vp: (P+1, ps, Hkv, Dh)
+            # kp/vp: (P+1, ps, Hkv, Dh); rk_i/rv_i: (R, Hkv, Dh)
+            p_i, kp, vp, rk_i, rv_i = scanned
 
             def attend(q, k, v):
                 kp2 = kp.at[tok_pages, in_page].set(k[0].astype(kp.dtype))
@@ -194,18 +238,37 @@ class PagedEngine:
                     1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
                 vall = vp2[page_ids].reshape(
                     1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
-                ctx = blockwise_attention(q, kall.astype(k.dtype),
-                                          vall.astype(v.dtype), causal=True,
-                                          window=window, q_offset=start)
-                return ctx, (kp2, vp2)
+                if n_remote == 0:
+                    ctx = blockwise_attention(q, kall.astype(k.dtype),
+                                              vall.astype(v.dtype),
+                                              causal=True, window=window,
+                                              q_offset=start)
+                    return ctx, (kp2, vp2)
+                # zero-copy: local causal partial + remote partial, merged
+                # by log-sum-exp (DistAttention). Local keys sit at absolute
+                # positions r_base + [0, npg*ps); remote keys at [0, r_base)
+                # — all remote positions precede every chunk query, so only
+                # validity masks the remote side.
+                key_pos = r_base + jnp.arange(npg * ps)
+                mask_l = positions[None, :, None] >= key_pos[None, None, :]
+                o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
+                mask_r = (jnp.arange(n_remote) < r_base)[None, None, :] \
+                    & jnp.ones((1, s, 1), bool)
+                o_r, m_r, l_r = attention_partial(q, rk_i[None], rv_i[None],
+                                                  mask_r)
+                ctx = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                          [l_l, l_r])
+                return ctx.astype(q.dtype), (kp2, vp2)
 
             y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions, attend)
             return (y,), (kp2, vp2)
 
         (x,), (k_pages, v_pages) = jax.lax.scan(
-            layer, (x,), (p_seg, k_pages, v_pages))
+            layer, (x,), (p_seg, k_pages, v_pages, rk, rv))
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x[:, -1:], cfg.vocab_size,
+        # logits of the last REAL chunk position (pad rows are garbage)
+        last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        logits = unembed(params["embed"], last, cfg.vocab_size,
                          fp32=cfg.logits_fp32)
         return logits[0, 0], k_pages, v_pages
 
@@ -257,6 +320,69 @@ class PagedEngine:
                          fp32=cfg.logits_fp32)[:, 0]
         return logits, k_pages, v_pages
 
+    @partial(jax.jit, static_argnums=(0,))
+    def _decode_zc_fn(self, params, k_pages, v_pages, tokens, positions,
+                      block_tables, ctx_lens, r_base, rk, rv):
+        """Batched one-token step where some slots serve their leading
+        context from pages *borrowed* from a peer instance (zero-copy
+        prefix lease). Arguments mirror :meth:`_decode_fn` plus:
+
+        r_base: (n,) borrowed tokens per slot (0 = fully local — such slots
+        reduce to the plain paged path numerically); rk, rv:
+        (L, n, R, Hkv, Dh) the borrowed pages' K/V gathered from each
+        creditor's pools, covering absolute positions ``[0, r_base[i])`` of
+        slot ``i``. Per layer, the local paged partial and the remote
+        partial are combined with the DistAttention log-sum-exp merge —
+        exactly the InfiniteLLM micro-attention aggregation, with the
+        borrower reading the creditor's pages in place of an RDMA fetch.
+        """
+        cfg = self.cfg
+        ecfg = self.ecfg
+        n = tokens.shape[0]
+        ps = ecfg.page_size
+        n_remote = rk.shape[2]
+        p_seg = params["segments"][0]
+
+        x = embed(params["embed"], tokens[:, None])  # (n, 1, d)
+        loc_pos = jnp.maximum(positions - r_base, 0)  # write slot, local
+        loc_lens = jnp.maximum(ctx_lens - r_base, 0)  # local context length
+        page_slot = block_tables[jnp.arange(n), loc_pos // ps]  # (n,)
+        page_slot = jnp.where(ctx_lens > 0, page_slot, ecfg.num_pages)
+        in_page = loc_pos % ps
+
+        def layer(carry, scanned):
+            xx, = carry
+            p_i, kp, vp, rk_i, rv_i = scanned  # rk_i: (n, R, Hkv, Dh)
+
+            def attend(q, k, v):
+                kp2 = kp.at[page_slot, in_page].set(k[:, 0].astype(kp.dtype))
+                vp2 = vp.at[page_slot, in_page].set(v[:, 0].astype(vp.dtype))
+                kall = kp2[block_tables].reshape(
+                    n, -1, cfg.num_kv_heads, cfg.head_dim)
+                vall = vp2[block_tables].reshape(
+                    n, -1, cfg.num_kv_heads, cfg.head_dim)
+                s_loc = kall.shape[1]
+                mask_l = (jnp.arange(s_loc)[None, :] <
+                          loc_lens[:, None])[:, None, :]  # (n, 1, S_loc)
+                o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
+                mask_r = (jnp.arange(n_remote)[None, :] <
+                          r_base[:, None])[:, None, :]
+                o_r, m_r, l_r = attention_partial(q, rk_i, rv_i, mask_r)
+                att = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                          [l_l, l_r])  # (n, 1, H, Dh)
+                return att.astype(q.dtype), (kp2, vp2)
+
+            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
+                                      attend)
+            return (y,), (kp2, vp2)
+
+        (x,), (k_pages, v_pages) = jax.lax.scan(
+            layer, (x,), (p_seg, k_pages, v_pages, rk, rv))
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size,
+                         fp32=cfg.logits_fp32)[:, 0]
+        return logits, k_pages, v_pages
+
     # -- ServingBackend protocol -------------------------------------------------
 
     def add_request(self, req: Request) -> None:
@@ -289,6 +415,79 @@ class PagedEngine:
         pos = np.zeros(n, np.int32)
         toks = np.zeros(n, np.int32)
         return bt, lens, pos, toks
+
+    def charge_network(self, seconds: float) -> None:
+        """Record modeled network time (payload copy / lease RPC). A
+        wall-clock engine cannot advance its clock, so this only feeds the
+        ``net_time`` stat (the virtual-clock SimBackend advances time)."""
+        self.net_time += seconds
+
+    # -- zero-copy remote prefixes (borrowed rBlocks) -----------------------------
+
+    def _check_zero_copy_ok(self) -> None:
+        if self.remote_reader is None:
+            raise RuntimeError(
+                "request holds a zero-copy lease but no remote_reader is "
+                "wired — RouterBackend must connect creditor pools")
+        if self._window is not None:
+            raise RuntimeError(
+                "zero-copy remote prefixes are unsupported with sliding-"
+                "window attention (the remote partial ignores the window)")
+
+    def _lease_kv(self, lease):
+        """(L, R, Hkv, Dh) K/V of a lease's borrowed pages, gathered from
+        the creditor's pools ONCE per lease and cached: the pages are
+        pinned on the board, refcounted through the home allocator, and
+        never written (any writer COWs a shared page first), so their
+        contents are immutable for the lease's lifetime — re-gathering per
+        decode step would put a pool-sized gather on the hot path."""
+        key = id(lease)
+        hit = self._lease_kv_cache.get(key)
+        if hit is None:
+            hk, hv = self.remote_reader(lease.home)
+            idx = jnp.asarray(lease.blocks, jnp.int32)
+            L, hkv, dh = (self.nlayers, self.cfg.num_kv_heads,
+                          self.cfg.head_dim)
+            hit = (hk[:, idx].reshape(L, -1, hkv, dh),
+                   hv[:, idx].reshape(L, -1, hkv, dh))
+            self._lease_kv_cache[key] = hit
+        return hit
+
+    def _prune_lease_cache(self) -> None:
+        live = {id(l) for l in self.scheduler.leases.values()}
+        for key in [k for k in self._lease_kv_cache if k not in live]:
+            del self._lease_kv_cache[key]
+
+    def _lease_kv_chunk(self, lease):
+        """(L, Rpad, Hkv, Dh) borrowed K/V, pow2-padded (pad tokens are
+        masked by ``r_base`` inside the jitted chunk fn)."""
+        k, v = self._lease_kv(lease)
+        pad = _pow2_bucket(lease.num_pages, 1) * self.ecfg.page_size \
+            - lease.num_tokens
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return k, v
+
+    def _lease_kv_batch(self, row_reqs):
+        """(L, n, Rpad, Hkv, Dh) stacked borrowed K/V for a decode batch
+        (zero rows for slots without a lease)."""
+        leases = self.scheduler.leases
+        L, hkv, dh = self.nlayers, self.cfg.num_kv_heads, self.cfg.head_dim
+        rmax = max(leases[r.request_id].num_pages for r in row_reqs
+                   if r is not None and r.request_id in leases)
+        rpad = _pow2_bucket(rmax, 1) * self.ecfg.page_size
+        rk = jnp.zeros((L, self.ecfg.max_slots, rpad, hkv, dh),
+                       self.k_pages.dtype)
+        rv = jnp.zeros_like(rk)
+        for slot, req in enumerate(row_reqs):
+            if req is None or req.request_id not in leases:
+                continue
+            lease = leases[req.request_id]
+            k, v = self._lease_kv(lease)
+            rk = rk.at[:, slot, :lease.num_tokens].set(k)
+            rv = rv.at[:, slot, :lease.num_tokens].set(v)
+        return rk, rv
 
     # -- per-request sampling ----------------------------------------------------
 
@@ -345,6 +544,8 @@ class PagedEngine:
         """Run ONE iteration (ORCA's unit of scheduling)."""
         now = time.monotonic() if now is None else now
         plan = self.scheduler.schedule()
+        if self._lease_kv_cache:  # drop gathers of released leases
+            self._prune_lease_cache()
         # release slots of preempted requests
         self.preemptions += len(plan.preempted)
         for req in plan.preempted:
@@ -377,12 +578,34 @@ class PagedEngine:
             if req.scheduled_time is None:
                 req.scheduled_time = now
             table = self.scheduler.tables[req.request_id]
-            n_ctx_pages = -(-ch.end // ps)  # ceil: pages covering [0, end)
-            page_ids = jnp.asarray(table.blocks[:n_ctx_pages], jnp.int32)
-            tokens = jnp.asarray(req.prompt[ch.start:ch.end], jnp.int32)[None]
+            # positions [0, r_base) are served from a creditor's pages
+            # (zero-copy lease); the local table covers [r_base, end)
+            r_base = self.scheduler.remote_tokens_of(req.request_id)
+            n_ctx_pages = -(-(ch.end - r_base) // ps)  # ceil, local pages
+            npg_pad = _pow2_bucket(n_ctx_pages, 1)
+            # pad with a REAL page, not the trash page: pad key positions
+            # are causally masked either way (they sit past every real
+            # query), but the trash page holds NaN K/V (inactive decode
+            # slots write their fully-masked attention output there) and a
+            # gathered NaN poisons the masked value einsum (0 * NaN = NaN)
+            page_arr = np.full(npg_pad, table.blocks[0], np.int32)
+            page_arr[:n_ctx_pages] = table.blocks[:n_ctx_pages]
+            s_pad = _pow2_bucket(ch.length)
+            tok_arr = np.zeros(s_pad, np.int32)
+            tok_arr[:ch.length] = req.prompt[ch.start:ch.end]
+            if r_base:
+                self._check_zero_copy_ok()
+                rk, rv = self._lease_kv_chunk(
+                    self.scheduler.leases[req.request_id])
+            else:
+                rk = jnp.zeros((self.nlayers, 0, self.cfg.num_kv_heads,
+                                self.cfg.head_dim), self.k_pages.dtype)
+                rv = rk
             logits, self.k_pages, self.v_pages = self._prefill_chunk_fn(
-                self.params, self.k_pages, self.v_pages, tokens, page_ids,
-                jnp.int32(ch.start))
+                self.params, self.k_pages, self.v_pages,
+                jnp.asarray(tok_arr)[None], jnp.asarray(page_arr),
+                jnp.int32(ch.start), jnp.int32(ch.length), jnp.int32(r_base),
+                rk, rv)
             if ch.is_last:
                 tok, lp = self._sample_one(req, logits)
                 self._emit(req, slot, tok, lp, now)
@@ -395,6 +618,7 @@ class PagedEngine:
         decode_reqs = [r for r in plan.decode]
         if decode_reqs:
             bt, lens, pos, toks = self._ctx_arrays()
+            rbase = np.zeros(self.ecfg.max_slots, np.int32)
             row_reqs: List[Optional[Request]] = [None] * self.ecfg.max_slots
             for req in decode_reqs:
                 slot = self.slots[req.request_id]
@@ -406,11 +630,23 @@ class PagedEngine:
                 lens[slot] = req.context_len
                 pos[slot] = req.context_len - 1
                 toks[slot] = self.last_token[slot]
+                rbase[slot] = self.scheduler.remote_tokens_of(req.request_id)
                 row_reqs[slot] = req
-            logits, self.k_pages, self.v_pages = self._decode_fn(
-                self.params, self.k_pages, self.v_pages,
-                jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(bt),
-                jnp.asarray(lens))
+            if rbase.any():
+                # >=1 slot reads a borrowed prefix: local paged partial +
+                # remote partial, merged (DistAttention). Fully-local slots
+                # ride along with r_base = 0.
+                self._check_zero_copy_ok()
+                rk, rv = self._lease_kv_batch(row_reqs)
+                logits, self.k_pages, self.v_pages = self._decode_zc_fn(
+                    self.params, self.k_pages, self.v_pages,
+                    jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(bt),
+                    jnp.asarray(lens), jnp.asarray(rbase), rk, rv)
+            else:
+                logits, self.k_pages, self.v_pages = self._decode_fn(
+                    self.params, self.k_pages, self.v_pages,
+                    jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(bt),
+                    jnp.asarray(lens))
             sampled, lps = self._sample_rows(logits, row_reqs)
             for req in decode_reqs:
                 slot = self.slots[req.request_id]

@@ -31,6 +31,25 @@ recomputing the shared system prompt. A hot prefix is therefore computed
 once cluster-wide and then served everywhere, even under round-robin
 placement.
 
+``share_mode`` picks how a published prefix reaches a peer:
+
+* ``copy`` (default) — payload adoption as above: page contents are shipped
+  once and live on in the peer's own radix tree;
+* ``zero_copy`` — borrowed rBlocks: the peer's scheduler admits the request
+  with a :class:`~repro.core.distkv.rmanager.RemoteLease` on the home
+  instance's *physical* pages (pinned on the board, refcounted through the
+  home allocator, debt tracked in the gManager ledger) and the engine
+  serves them in place through the DistAttention partial ``(o, m, l)``
+  merge — no payload ever moves, at the price of a per-iteration merge;
+* ``auto`` — per-request decision by the
+  :class:`~repro.core.distkv.netmodel.NetworkModel`: borrow when the
+  estimated lifetime merge overhead undercuts the one-time payload copy
+  (hot short prefixes borrow, long prefixes ahead of long decodes copy).
+
+``net`` attaches that network cost model; virtual-clock children charge
+copies and lease RPCs against their clock, wall-clock engines record them
+as ``net_time``.
+
 Clock semantics: with all-virtual children (SimBackend) the router is
 event-driven — each ``step`` advances the laggard instance, and ``clock()``
 reports the cluster frontier, so policy sweeps over many instances run in
@@ -45,7 +64,11 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.distkv.gmanager import GManager, Heartbeat
+from repro.core.distkv.netmodel import NetworkModel
+from repro.core.distkv.rmanager import RManager
 from repro.core.scheduling.request import Request
+
+SHARE_MODES = ("copy", "zero_copy", "auto")
 
 
 def _load_of(child) -> Tuple[int, int]:
@@ -167,15 +190,27 @@ class RouterBackend:
     def __init__(self, children: Sequence, *,
                  policy: Union[str, object] = "round_robin",
                  prefix_share: bool = False,
+                 share_mode: str = "copy",
                  hot_threshold: int = 1,
                  board_pages: Optional[int] = None,
+                 net: Optional[NetworkModel] = None,
                  gmanager: Optional[GManager] = None):
         if not children:
             raise ValueError("RouterBackend needs at least one child backend")
+        if share_mode not in SHARE_MODES:
+            raise ValueError(f"share_mode must be one of {SHARE_MODES}, "
+                             f"got {share_mode!r}")
+        if share_mode != "copy" and not prefix_share:
+            raise ValueError("share_mode needs prefix_share=True "
+                             "(there is nothing to serve without the board)")
         self.children = list(children)
         self.policy = POLICIES[policy]() if isinstance(policy, str) else \
             policy
         self.prefix_share = prefix_share
+        self.share_mode = share_mode
+        # auto needs a cost model to decide; zero_copy/copy work without
+        # one (network then costs nothing on virtual clocks)
+        self.net = net or (NetworkModel() if share_mode == "auto" else None)
         self.hot_threshold = hot_threshold
         # board_pages: size cap for the publication board (LRU page
         # eviction) — ignored when an explicit gmanager is supplied
@@ -188,6 +223,11 @@ class RouterBackend:
         # after an iteration that committed new cache hits
         self._last_hits: List[int] = [0] * len(self.children)
         self._virtual = all(c.clock() is not None for c in self.children)
+        # zero-copy lease stats (cumulative; the gManager ledger holds the
+        # *outstanding* debt)
+        self.leases_granted = 0
+        self.pages_borrowed = 0
+        self.rms: Dict[int, RManager] = {}
         if prefix_share:
             sizes = set()
             for i, child in enumerate(self.children):
@@ -204,8 +244,34 @@ class RouterBackend:
                     f"got {sorted(sizes)}")
             for i, child in enumerate(self.children):
                 child.prefix_cache.track_hot = True
-                child.scheduler.prefix_importer = self._make_importer(i)
+                if share_mode != "zero_copy":
+                    child.scheduler.prefix_importer = self._make_importer(i)
+            if share_mode != "copy":
+                self._wire_zero_copy()
         self._heartbeat_all()
+
+    def _wire_zero_copy(self) -> None:
+        """Borrowed-rBlock serving: per-instance rManagers over the shared
+        gManager (debt ledger), board pins so a home cannot free a
+        published (lendable) page, creditor pool readers on engine
+        children, and the schedulers' remote_adopter hooks."""
+        self.rms = {i: RManager(i, c.allocator, self.g)
+                    for i, c in enumerate(self.children)}
+        for rm in self.rms.values():
+            rm.register_peers(self.rms)
+        board = self.g.prefix_board
+        board.on_pin = \
+            lambda home, block: self.children[home].allocator.incref(block)
+        board.on_unpin = \
+            lambda home, block: self.children[home].allocator.decref(block)
+        for i, child in enumerate(self.children):
+            if hasattr(child, "k_pages"):  # engine: needs creditor pools
+                child.remote_reader = self._read_pools
+            child.scheduler.remote_adopter = self._make_remote_adopter(i)
+
+    def _read_pools(self, home: int):
+        c = self.children[home]
+        return c.k_pages, c.v_pages
 
     # -- distkv wiring ---------------------------------------------------------
 
@@ -222,15 +288,23 @@ class RouterBackend:
         """Export any radix path on instance ``i`` that just crossed the hit
         threshold to the cluster board (token keys + page payloads). Pages
         the board already holds are not re-exported — payload export is a
-        device->host page copy on engine children."""
+        device->host page copy on engine children. Under zero-copy serving
+        no payload is exported at all (the whole point); the physical block
+        ids are published instead so peers can borrow the pages in place
+        (auto publishes both, since either path may win)."""
         child = self.children[i]
         pc = child.prefix_cache
         board = self.g.prefix_board
+        lend = self.share_mode != "copy"
         for tokens, blocks in pc.take_hot_paths(self.hot_threshold):
-            have = board.covered(tokens)
-            payloads = [None] * have + \
-                [self._export_payload(child, b) for b in blocks[have:]]
-            board.publish(i, tokens, payloads, pc.page_size)
+            if self.share_mode == "zero_copy":
+                payloads = [None] * len(blocks)
+            else:
+                have = board.covered(tokens)
+                payloads = [None] * have + \
+                    [self._export_payload(child, b) for b in blocks[have:]]
+            board.publish(i, tokens, payloads, pc.page_size,
+                          blocks=blocks if lend else None)
 
     def _make_importer(self, i: int):
         """The child scheduler's adopt-imported-pages hook: given a prompt
@@ -261,9 +335,73 @@ class RouterBackend:
             if write is not None and adopted:
                 write([b for _, b in adopted],
                       [pages[idx].payload for idx, _ in adopted])
+            if adopted and self.net is not None:
+                # payload transfer is not free: serialization + wire time
+                # per copied page (virtual children advance their clock,
+                # engines record net_time)
+                charge = getattr(child, "charge_network", None)
+                if charge is not None:
+                    charge(self.net.page_copy_time(len(adopted)))
             return len(adopted)
 
         return importer
+
+    def _make_remote_adopter(self, i: int):
+        """The child scheduler's zero-copy hook: offer a
+        :class:`~repro.core.distkv.rmanager.RemoteLease` on the longest
+        published single-home page chain that (a) strictly extends the
+        local match, (b) has lendable block ids, and (c) the child can
+        actually read (an engine needs an engine creditor's pools; a
+        cost-model sim borrows from anyone — bookkeeping only). In ``auto``
+        mode the NetworkModel decides borrow-vs-copy per request; declining
+        here lets the copy importer run instead."""
+        child = self.children[i]
+        child_is_engine = hasattr(child, "k_pages")
+
+        def adopter(req: Request, local_tokens: int):
+            pc = child.prefix_cache
+            pages = self.g.prefix_board.match(req.prompt,
+                                              max_tokens=req.prompt_len - 1)
+            usable, home = [], None
+            for page in pages:
+                if page.block is None:
+                    break
+                if home is None:
+                    home = page.home
+                elif page.home != home:
+                    break  # one creditor per lease (one partial merge)
+                usable.append(page)
+            if home is None or home == i:
+                return None  # nothing lendable / it lives here already
+            if child_is_engine and \
+                    not hasattr(self.children[home], "k_pages"):
+                return None  # a sim home has no KV an engine could read
+            if len(usable) * pc.page_size <= local_tokens:
+                return None  # the local tree already matches at least as far
+            if self.share_mode == "auto" and not self.net.prefer_borrow(
+                    len(usable), pc.page_size, req.max_new_tokens):
+                return None  # copying pays off — let the importer run
+            try:
+                lease = self.rms[i].borrow_blocks(
+                    home, [p.block for p in usable])
+            except ValueError:
+                return None  # stale board entry: fall back to copy/compute
+
+            def on_commit(l):
+                # fired only when an admission actually lands with the
+                # lease — a failed admission releases it and must neither
+                # inflate the stats nor re-charge the RPC on every retry
+                self.leases_granted += 1
+                self.pages_borrowed += l.num_pages
+                if self.net is not None:
+                    charge = getattr(child, "charge_network", None)
+                    if charge is not None:
+                        charge(self.net.lease_time(l.num_pages))
+
+            lease._on_commit = on_commit
+            return lease
+
+        return adopter
 
     # -- placement -------------------------------------------------------------
 
@@ -387,5 +525,9 @@ class RouterBackend:
                 row["prefix_hit_rate"] = pc.hit_rate
                 row["cached_pages"] = pc.num_pages
                 row["adopted_pages"] = pc.adopted_pages
+            if self.share_mode != "copy":
+                # outstanding rBlock debt from the gManager ledger
+                row["lent_pages"] = self.g.lent_by(i)
+                row["borrowed_pages"] = self.g.borrowed_by(i)
             out[i] = row
         return out

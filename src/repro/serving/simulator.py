@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.distkv.gmanager import GManager
+from repro.core.distkv.netmodel import NetworkModel
 from repro.core.distkv.rmanager import RManager
 from repro.core.paging.allocator import (BlockAllocator,
                                          ContiguousPreallocAllocator,
@@ -77,6 +78,10 @@ class SimResult:
     # multi-instance router runs: per-instance breakdown + adopted pages
     per_instance: Optional[Dict[int, Dict]] = None
     adopted_pages: int = 0
+    # zero-copy runs: pages served in place via borrowed rBlocks, and the
+    # modeled network time spent on copies + lease RPCs
+    borrowed_pages: int = 0
+    net_time: float = 0.0
 
     @property
     def max_tbts(self) -> np.ndarray:
@@ -262,8 +267,16 @@ class SimBackend:
                  prefix_cache: bool = False,
                  max_preemptions: Optional[int] = None,
                  chunk_policy: str = "decode_first",
-                 cost: Optional[CostModel] = None):
+                 cost: Optional[CostModel] = None,
+                 net: Optional[NetworkModel] = None):
         self.cost = cost or CostModel()
+        # network/serialization model for cross-instance KV movement: the
+        # router charges payload copies / lease RPCs via charge_network, and
+        # step() adds the per-iteration partial-merge overhead of requests
+        # decoding over borrowed rBlocks. None = network is free (the old
+        # behavior, which flattered copy-mode sharing).
+        self.net = net
+        self.net_time = 0.0
         self.allocator = BlockAllocator(num_blocks, block_size)
         self.prefix_cache = PrefixCache(self.allocator) if prefix_cache \
             else None
@@ -296,6 +309,12 @@ class SimBackend:
         """Fast-forward across an idle gap (next arrival)."""
         self._now = max(self._now, t)
 
+    def charge_network(self, seconds: float) -> None:
+        """Advance the virtual clock by modeled network time (payload copy
+        at copy-mode adoption, lease RPC at borrow)."""
+        self._now += seconds
+        self.net_time += seconds
+
     def step(self, now: Optional[float] = None) -> List[Request]:
         plan = self.scheduler.schedule()
         self.preemptions += len(plan.preempted)
@@ -307,12 +326,32 @@ class SimBackend:
             # backend stalls forever with the request bouncing in waiting
             return self.scheduler.complete_iteration(plan, self._now) \
                 if plan.preempted else []
-        sum_ctx = sum(r.context_len for r in plan.decode)
+        # context reads split local vs remote: a zero-copy lease serves a
+        # request's leading r_base tokens from a creditor instance's pages
+        # (micro-attention computed where the block lives, partials merged),
+        # charged at c_remote instead of c_ctx, plus a per-request merge
+        # round when the network model is on
+        remote_of = self.scheduler.remote_tokens_of
+        sum_ctx = sum_remote = n_borrowing = 0
+        for r in plan.decode:
+            rb = remote_of(r.request_id)
+            sum_ctx += r.context_len - rb
+            sum_remote += rb
+            n_borrowing += 1 if rb else 0
         # per-chunk cost: chunk tokens read the KV already written by the
-        # cached prefix and earlier chunks (see prefill_read_tokens)
-        sum_ctx += sum(self.cost.prefill_read_tokens(c.start, c.length)
-                       for c in plan.chunks)
-        self._now += self.cost.iteration_time(plan.token_count(), sum_ctx)
+        # cached prefix and earlier chunks (see prefill_read_tokens);
+        # borrowed prefix tokens are read remotely by every chunk token
+        for c in plan.chunks:
+            rb = remote_of(c.req.request_id)
+            sum_ctx += self.cost.prefill_read_tokens(c.start - rb, c.length)
+            sum_remote += c.length * rb
+            n_borrowing += 1 if rb else 0
+        self._now += self.cost.iteration_time(plan.token_count(), sum_ctx,
+                                              sum_remote)
+        if self.net is not None and n_borrowing:
+            t_net = self.net.borrow_iter_overhead(n_borrowing)
+            self._now += t_net
+            self.net_time += t_net  # network-attributable, like copies
         for c in plan.chunks:  # prefill-in-flight: admission time
             if c.req.scheduled_time is None:
                 c.req.scheduled_time = self._now
@@ -380,6 +419,7 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                     policy: str = "round_robin",
                     prefix_cache: bool = True,
                     prefix_share: bool = False,
+                    share_mode: str = "copy",
                     hot_threshold: int = 1,
                     board_pages: Optional[int] = None,
                     blocks_per_instance: int = 1800, block_size: int = 16,
@@ -387,7 +427,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                     max_tokens_per_iter: int = 8192,
                     max_preemptions: Optional[int] = None,
                     chunk_policy: str = "decode_first",
-                    cost: Optional[CostModel] = None) -> SimResult:
+                    cost: Optional[CostModel] = None,
+                    net: Optional[NetworkModel] = None) -> SimResult:
     """Virtual-clock cluster sim: N :class:`SimBackend` instances behind a
     :class:`~repro.serving.router.RouterBackend`, driven to completion
     through the LLMService front-end. The event-driven router advances the
@@ -396,8 +437,12 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
 
     ``policy``: ``round_robin`` | ``least_loaded`` | ``prefix_affinity``
     (see ``serving.router.POLICIES``). ``prefix_share`` publishes hot radix
-    paths through the distkv board so instances adopt each other's cached
-    prefixes (requests need real token ids)."""
+    paths through the distkv board so instances reuse each other's cached
+    prefixes; ``share_mode`` picks how (``copy`` payload adoption |
+    ``zero_copy`` borrowed rBlocks served through the DistAttention merge |
+    ``auto`` per-request cost decision). ``net`` attaches the
+    :class:`~repro.core.distkv.netmodel.NetworkModel` so copies and borrows
+    cost virtual time (required for an honest copy-vs-borrow comparison)."""
     from repro.serving.api import LLMService  # late: api imports Request
     from repro.serving.router import RouterBackend
 
@@ -406,12 +451,13 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                            max_tokens_per_iter=max_tokens_per_iter,
                            prefix_cache=prefix_cache,
                            max_preemptions=max_preemptions,
-                           chunk_policy=chunk_policy, cost=cost)
+                           chunk_policy=chunk_policy, cost=cost, net=net)
                 for _ in range(n_instances)]
     router = RouterBackend(children, policy=policy,
                            prefix_share=prefix_share,
+                           share_mode=share_mode,
                            hot_threshold=hot_threshold,
-                           board_pages=board_pages)
+                           board_pages=board_pages, net=net)
     svc = LLMService(router)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -431,6 +477,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
         res.prefix_hit_rate = agg.hit_rate
         res.cached_pages = agg.num_pages
         res.adopted_pages = agg.adopted_pages
+    res.borrowed_pages = router.pages_borrowed
+    res.net_time = sum(getattr(c, "net_time", 0.0) for c in children)
     return res
 
 

@@ -362,10 +362,15 @@ def test_rescinded_victim_leaves_no_stale_cow_pairs():
     plan: its fresh target block is freed and may be reallocated before
     the engine applies plan.cow — a stale copy would clobber the new
     owner's page."""
+    # decode_reserve=False: the reserve (PR 5) forecloses exactly this
+    # admit-then-preempt-same-iteration scenario; disable it so the rescind
+    # machinery (which still guards decode-vs-decode preemptions and COW
+    # shortfalls) keeps its regression coverage
     a = BlockAllocator(10, PS)
     c = PrefixCache(a)
     s = IterationScheduler(a, prefix_cache=c, max_tokens_per_iter=8192,
-                           chunk_policy="prefill_first")
+                           chunk_policy="prefill_first",
+                           decode_reserve=False)
     r0 = Request(0, 0.0, list(range(24)), max_new_tokens=2)
     _drive(s, r0)  # seeds the tree with 3 pages
     r1 = Request(1, 0.0, list(range(1000, 1006)), max_new_tokens=20)

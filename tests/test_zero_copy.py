@@ -1,0 +1,562 @@
+"""Zero-copy remote prefix serving over borrowed rBlocks.
+
+Covers the PR's acceptance criteria and satellites: RManager lending of
+existing pages + repay-before-free ordering (a creditor never leaks a lent
+block, including on debtor preemption), board block ids with pin/unpin,
+scheduler admission with a RemoteLease (suffix-only local pages, lease
+lifecycle across finish/preempt/fork), the prefill_first decode-page
+reserve, pow2 chunk-shape bucketing (compile-counter), and the token
+identity of instance B's decode when its prefix KV is served from instance
+A's pages through the DistAttention partial merge — vs the fp32 oracle and
+vs copy-mode adoption."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distkv import (GManager, NetworkModel, RManager, RemoteLease)
+from repro.core.distkv.prefixshare import PrefixShareBoard
+from repro.core.paging import BlockAllocator
+from repro.core.prefixcache import PrefixCache
+from repro.core.scheduling import IterationScheduler, Phase, Request
+from repro.serving.simulator import (SimBackend, make_shared_prefix_workload,
+                                     simulate_router)
+
+PS = 8  # page size for the engine tests
+
+
+def _cluster(n=2, blocks=8, bs=16, **g_kw):
+    g = GManager(n, **g_kw)
+    rms = {i: RManager(i, BlockAllocator(blocks, bs), g) for i in range(n)}
+    for r in rms.values():
+        r.register_peers(rms)
+    return g, rms
+
+
+# -- NetworkModel ---------------------------------------------------------------
+
+def test_netmodel_copy_vs_borrow_decision():
+    net = NetworkModel()
+    # short decodes over a hot prefix: the one-time payload copy never pays
+    # itself off -> borrow; very long decodes amortize it -> copy
+    assert net.prefer_borrow(32, 16, est_decode_tokens=16)
+    assert not net.prefer_borrow(32, 16, est_decode_tokens=50_000)
+    # monotone in decode length
+    costs = [net.borrow_lifetime_cost(8, 16, t) for t in (1, 64, 4096)]
+    assert costs == sorted(costs)
+    assert net.page_copy_time(4) == pytest.approx(2 * net.page_copy_time(2))
+
+
+# -- RManager: lending existing pages -------------------------------------------
+
+def test_lend_and_release_existing_pages():
+    g, rms = _cluster()
+    b = rms[1].allocator.alloc_block()  # stands in for a cached page
+    lease = rms[0].borrow_blocks(1, [b])
+    assert rms[1].allocator.refcount_of(b) == 2  # owner + lease
+    assert g.lent_by(1) == 1 and g.borrowed_by(0) == 1
+    assert lease.num_tokens == rms[0].allocator.block_size
+    lease.release()
+    assert rms[1].allocator.refcount_of(b) == 1
+    assert g.lent_by(1) == 0
+    lease.release()  # idempotent past zero: no double repay
+    assert rms[1].allocator.refcount_of(b) == 1
+
+
+def test_lease_refcount_shares_across_holders():
+    g, rms = _cluster()
+    b = rms[1].allocator.alloc_block()
+    lease = rms[0].borrow_blocks(1, [b])
+    lease.acquire()  # a COW-forked sibling
+    lease.release()
+    assert g.lent_by(1) == 1, "creditor repaid only by the LAST holder"
+    lease.release()
+    assert g.lent_by(1) == 0
+    with pytest.raises(ValueError):
+        lease.acquire()  # released leases cannot be revived
+
+
+def test_lend_free_block_raises_before_ledger():
+    g, rms = _cluster()
+    with pytest.raises(ValueError, match="lend"):
+        rms[1].lend_blocks(0, [3])  # never allocated
+    assert not g.ledger, "a failed lend must not touch the debt ledger"
+    with pytest.raises(ValueError):
+        rms[0].borrow_blocks(0, [0])  # borrowing from oneself
+
+
+def test_free_seq_repays_creditors_before_local_frees():
+    """AUDIT (satellite): a fault in the debtor's local teardown (e.g. a
+    double-free surfacing mid-loop) must not strand the creditor's lent
+    block — remote repayments run first."""
+    g, rms = _cluster(blocks=4)
+    rms[0].append_tokens(7, 16 * 5)  # 4 local + 1 borrowed
+    assert g.borrowed_by(0) == 1
+    kv = rms[0].seqs[7]
+    local = next(rb for rb in kv.rblocks if rb.device_id == 0)
+    rms[0].allocator.decref(local.physical_id)  # corrupt: premature free
+    with pytest.raises(ValueError):
+        rms[0].free_seq(7)
+    # the local teardown faulted, but the creditor was already repaid
+    assert g.borrowed_by(0) == 0
+    assert all(rm.allocator.refcount_of(rb.physical_id) == 0
+               for rm in rms.values() for rb in kv.rblocks
+               if rb.device_id == 1)
+
+
+# -- publication board: lendable blocks + pins -----------------------------------
+
+def test_board_blocks_pin_and_evict_unpin():
+    events = []
+    board = PrefixShareBoard(max_pages=2)
+    board.on_pin = lambda h, b: events.append(("pin", h, b))
+    board.on_unpin = lambda h, b: events.append(("unpin", h, b))
+    a = list(range(16))
+    board.publish(0, a, [None, None], 8, blocks=[5, 6])
+    assert events == [("pin", 0, 5), ("pin", 0, 6)]
+    hit = board.match(a)
+    assert [p.block for p in hit] == [5, 6] and all(p.home == 0 for p in hit)
+    events.clear()
+    board.publish(1, list(range(100, 116)), [None, None], 8, blocks=[7, 8])
+    # over the cap: path a ages out tail-first, returning its pins
+    assert ("unpin", 0, 6) in events and ("unpin", 0, 5) in events
+    assert board.num_pages == 2
+
+
+def test_board_payload_upgrade_moves_the_pin():
+    """A sim's bookkeeping publication later upgraded by an engine with real
+    payloads: the lendable block must follow the payload home — the old
+    lender's pin is returned, the new home's page is pinned."""
+    events = []
+    board = PrefixShareBoard()
+    board.on_pin = lambda h, b: events.append(("pin", h, b))
+    board.on_unpin = lambda h, b: events.append(("unpin", h, b))
+    toks = list(range(8))
+    board.publish(0, toks, [None], 8, blocks=[3])
+    board.publish(1, toks, ["real-kv"], 8, blocks=[9])
+    assert events == [("pin", 0, 3), ("unpin", 0, 3), ("pin", 1, 9)]
+    page = board.match(toks)[0]
+    assert page.home == 1 and page.block == 9 and page.payload == "real-kv"
+
+
+# -- scheduler: lease admission lifecycle ----------------------------------------
+
+def _lease(tokens, ps=PS, home=1, released=None):
+    blocks = list(range(100, 100 + tokens // ps))
+    rel = released if released is not None else []
+    return RemoteLease(home=home, debtor=0, blocks=blocks, page_size=ps,
+                       _release=lambda l: rel.append(l)), rel
+
+
+def test_scheduler_admits_with_lease_suffix_only():
+    a = BlockAllocator(16, PS)
+    pc = PrefixCache(a)
+    lease, released = _lease(16)
+    offered = []
+
+    def adopter(req, local_tokens):
+        offered.append((req.request_id, local_tokens))
+        return lease
+
+    s = IterationScheduler(a, prefix_cache=pc, max_tokens_per_iter=999,
+                           remote_adopter=adopter)
+    r = Request(0, 0.0, list(range(24)), max_new_tokens=2)
+    s.add_request(r)
+    plan = s.schedule()
+    assert offered == [(0, 0)]
+    # the borrowed 16 tokens are NOT recomputed and hold NO local pages:
+    # only the 8-token suffix is local, prefilled at an absolute start of 16
+    assert [(c.start, c.length) for c in plan.chunks] == [(16, 8)]
+    assert r.num_cached_tokens == 16
+    assert s.remote_tokens_of(0) == 16
+    table = s.tables[0]
+    assert len(table.blocks) == 1 and table.num_tokens == 8
+    r.output.append(0)
+    s.complete_iteration(plan, 0.0)
+    # the leased prompt must NOT enter the local radix tree (its leading
+    # pages live on the creditor — there is no page-0-aligned path here)
+    assert pc.match(r.prompt) == []
+    while r.phase != Phase.FINISHED:
+        plan = s.schedule()
+        for x in plan.prefill + plan.decode:
+            x.output.append(0)
+        s.complete_iteration(plan, 1.0)
+    assert released == [lease], "finish must repay the creditor"
+    assert 0 not in s.leases
+    pc.clear()
+    assert a.num_free == 16 and not a.refcount
+
+
+def test_scheduler_preemption_releases_lease_then_releases():
+    """Debtor preemption: the lease is repaid BEFORE local pages are freed,
+    and recompute starts over (a fresh lease may be granted on
+    re-admission)."""
+    a = BlockAllocator(16, PS)
+    pc = PrefixCache(a)
+    grants = []
+
+    def adopter(req, local_tokens):
+        lease, rel = _lease(16)
+        grants.append((lease, rel))
+        return lease
+
+    s = IterationScheduler(a, prefix_cache=pc, max_tokens_per_iter=999,
+                           remote_adopter=adopter)
+    r = Request(0, 0.0, list(range(24)), max_new_tokens=8)
+    s.add_request(r)
+    s.complete_iteration(s.schedule(), 0.0)
+    assert len(grants) == 1
+    s._preempt(r)
+    assert grants[0][1] == [grants[0][0]], "preemption must repay"
+    assert 0 not in s.leases and 0 not in s.tables
+    assert a.num_free == 16
+    plan = s.schedule()  # re-admission takes a fresh lease
+    assert len(grants) == 2 and s.remote_tokens_of(0) == 16
+    assert [(c.start, c.length) for c in plan.chunks] == [(16, 8)]
+
+
+def test_scheduler_releases_shorter_lease_and_uses_local_match():
+    """A lease no longer than the local radix match is useless: it must be
+    released immediately and the local path used instead."""
+    a = BlockAllocator(16, PS)
+    pc = PrefixCache(a)
+    s = IterationScheduler(a, prefix_cache=pc, max_tokens_per_iter=999)
+    warm = Request(0, 0.0, list(range(24)), max_new_tokens=1)
+    s.add_request(warm)
+    s.complete_iteration(s.schedule(), 0.0)
+    while warm.phase != Phase.FINISHED:
+        plan = s.schedule()
+        for x in plan.prefill + plan.decode:
+            x.output.append(0)
+        s.complete_iteration(plan, 1.0)
+    lease, released = _lease(16)  # local tree already matches 16 tokens
+    s.remote_adopter = lambda req, local: lease
+    r = Request(1, 0.0, list(range(24)), max_new_tokens=1)
+    s.add_request(r)
+    s.schedule()
+    assert released == [lease]
+    assert 1 not in s.leases
+    # served by the LOCAL pages (2 full pages + a token-level partial hit)
+    assert r.num_cached_tokens >= 16
+
+
+# -- prefill_first decode-page reserve (satellite) -------------------------------
+
+def _crunch_scheduler(decode_reserve):
+    """The PR-4 crunch: two decoders about to cross a page boundary while a
+    token-level-hit admission wants the last free pages."""
+    a = BlockAllocator(10, PS)
+    c = PrefixCache(a)
+    s = IterationScheduler(a, prefix_cache=c, max_tokens_per_iter=8192,
+                           chunk_policy="prefill_first",
+                           decode_reserve=decode_reserve)
+    r0 = Request(0, 0.0, list(range(24)), max_new_tokens=2)
+    s.add_request(r0)
+    it = 0.0
+    while r0.phase != Phase.FINISHED:
+        plan = s.schedule()
+        for x in plan.prefill + plan.decode:
+            x.output.append(0)
+        s.complete_iteration(plan, it)
+        it += 1.0
+    r1 = Request(1, 0.0, list(range(1000, 1006)), max_new_tokens=20)
+    r3 = Request(3, 0.0, list(range(2000, 2006)), max_new_tokens=20)
+    s.add_request(r1)
+    s.add_request(r3)
+    while True:
+        plan = s.schedule()
+        for x in plan.prefill + plan.decode:
+            x.output.append(0)
+        s.complete_iteration(plan, it)
+        it += 1.0
+        if s.tables[1].num_tokens >= 16:
+            break
+    r2 = Request(2, 0.0, list(range(20)) + [777] * 8, max_new_tokens=2)
+    s.add_request(r2)
+    return s, (r1, r2, r3), it
+
+
+def test_prefill_first_decode_reserve_prevents_admit_then_preempt():
+    """REGRESSION (satellite): under prefill_first, admission-before-decode
+    used to admit a request that the same iteration's decode growth then
+    preempted. The decode-page reserve defers the admission instead: no
+    preemption, the decodes get their pages, and the request is admitted on
+    a later iteration once pages free up."""
+    s, (r1, r2, r3), it = _crunch_scheduler(decode_reserve=True)
+    plan = s.schedule()
+    assert r2 in s.waiting and r2 not in plan.preempted
+    assert not plan.preempted, "the reserve must prevent the preemption"
+    assert r1 in plan.decode and r3 in plan.decode
+    for x in plan.prefill + plan.decode:
+        x.output.append(0)
+    s.complete_iteration(plan, it)
+    # everything still completes (r2 admitted once pages free up)
+    for k in range(200):
+        plan = s.schedule()
+        if plan.empty and not s.waiting:
+            break
+        for x in plan.prefill + plan.decode:
+            x.output.append(0)
+        s.complete_iteration(plan, it + 1 + k)
+    assert all(r.phase == Phase.FINISHED for r in (r1, r2, r3))
+    assert r2.preemptions == 0
+
+
+def test_crunch_without_reserve_still_preempts():
+    """Control: decode_reserve=False reproduces the PR-4 behavior the
+    reserve fixes (same engineered crunch, admission then preemption)."""
+    s, (r1, r2, r3), it = _crunch_scheduler(decode_reserve=False)
+    plan = s.schedule()
+    assert r2 in plan.preempted and r2 in s.waiting
+
+
+# -- sim cluster end-to-end ------------------------------------------------------
+
+def _wl(n=40, out_len=16, seed=3):
+    return make_shared_prefix_workload(n, rate=100.0, n_groups=2,
+                                       prefix_len=64, suffix_len=16,
+                                       out_len=out_len, seed=seed,
+                                       group_draw="random")
+
+
+def test_sim_cluster_zero_copy_end_to_end():
+    res = simulate_router(_wl(), n_instances=3, policy="round_robin",
+                          prefix_share=True, share_mode="zero_copy",
+                          blocks_per_instance=128, block_size=16,
+                          net=NetworkModel())
+    assert res.completed_frac == 1.0
+    assert res.borrowed_pages > 0, "zero_copy must actually borrow"
+    assert res.adopted_pages == 0, "zero_copy must never copy payloads"
+    assert res.prefix_hit_rate is not None and res.prefix_hit_rate > 0
+    # every lease repaid: no outstanding debt anywhere after the drain
+    for row in res.per_instance.values():
+        assert row["lent_pages"] == 0 and row["borrowed_pages"] == 0
+
+
+def test_sim_cluster_copy_vs_zero_copy_same_tokens():
+    """share_mode must not change WHAT is generated, only how the prefix
+    KV travels (the sim emits one token per granted iteration either way)."""
+    a = simulate_router(_wl(), n_instances=2, prefix_share=True,
+                        share_mode="copy", blocks_per_instance=128,
+                        block_size=16)
+    b = simulate_router(_wl(), n_instances=2, prefix_share=True,
+                        share_mode="zero_copy", blocks_per_instance=128,
+                        block_size=16)
+    for ra, rb in zip(a.requests, b.requests):
+        assert ra.total_generated == rb.total_generated
+
+
+def test_sim_auto_mode_follows_network_model():
+    """auto: short decodes borrow (the copy never pays itself off within
+    the request), very long decodes copy."""
+    short = simulate_router(_wl(out_len=8), n_instances=2, prefix_share=True,
+                            share_mode="auto", blocks_per_instance=512,
+                            block_size=16, net=NetworkModel())
+    assert short.borrowed_pages > 0 and short.adopted_pages == 0
+    long_ = simulate_router(_wl(n=16, out_len=2500), n_instances=2,
+                            prefix_share=True, share_mode="auto",
+                            blocks_per_instance=512, block_size=16,
+                            max_tokens_per_iter=16384, net=NetworkModel())
+    assert long_.adopted_pages > 0 and long_.borrowed_pages == 0
+
+
+def test_router_share_mode_validation():
+    from repro.serving.router import RouterBackend
+    children = [SimBackend(num_blocks=32, block_size=8, prefix_cache=True)
+                for _ in range(2)]
+    with pytest.raises(ValueError, match="share_mode"):
+        RouterBackend(children, prefix_share=True, share_mode="rdma")
+    with pytest.raises(ValueError, match="prefix_share"):
+        RouterBackend(children, share_mode="zero_copy")
+
+
+# -- engine: chunk-shape bucketing (satellite) -----------------------------------
+
+def _fresh_engine(cfg, params, **kw):
+    from repro.serving.engine import EngineConfig, PagedEngine
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("max_slots", 4)
+    return PagedEngine(cfg, params, EngineConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    from repro.configs import smoke_config
+    from repro.models import Model
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None, logits_fp32=True)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_chunk_compile_count_is_logarithmic(model_setup):
+    """REGRESSION (satellite): _prefill_chunk_fn retraced per
+    (chunk_len, n_pages) shape pair; with pow2 bucketing a mixed-length
+    workload compiles O(log) variants, not one per distinct length."""
+    from repro.serving.engine import PagedEngine
+    cfg, model, params = model_setup
+    eng = _fresh_engine(cfg, params)
+    fn = PagedEngine._prefill_chunk_fn
+    before = fn._cache_size()
+    rng = np.random.default_rng(5)
+    lengths = [9, 11, 13, 21, 27, 37, 45, 53, 61, 63]
+    for i, n in enumerate(lengths):
+        r = Request(i, 0.0, rng.integers(0, cfg.vocab_size, n).tolist(),
+                    max_new_tokens=1)
+        eng.add_request(r)
+        eng.run_to_completion()
+    traced = fn._cache_size() - before
+    # 10 distinct lengths bucket to s_pad in {16, 32, 64} (pages follow):
+    # far fewer compiles than the 10 the unbucketed shapes would cost
+    assert traced <= 4, f"{traced} chunk variants compiled for " \
+        f"{len(set(lengths))} distinct chunk lengths"
+
+
+def test_bucketed_chunk_token_identity(model_setup):
+    """Padding + masking must be a pure compile-time optimization: odd,
+    unaligned prompt lengths decode identically to the fp32 oracle path
+    (covers the pad-scatter/trash-page and last-real-position logits)."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(6)
+    eng = _fresh_engine(cfg, params)
+    for i, n in enumerate((7, 19, 33)):
+        prompt = rng.integers(0, cfg.vocab_size, n).tolist()
+        r = Request(i, 0.0, list(prompt), max_new_tokens=3)
+        eng.add_request(r)
+        eng.run_to_completion()
+        assert r.full_output == _oracle(model, params, prompt, 3), \
+            f"prompt len {n}"
+
+
+# -- engine: zero-copy token identity (ACCEPTANCE) -------------------------------
+
+class ScriptedPolicy:
+    def __init__(self, script):
+        self.script = list(script)
+        self._i = 0
+
+    def choose(self, req, children):
+        i = self.script[self._i]
+        self._i += 1
+        return i
+
+
+def _oracle(model, params, prompt, n):
+    tokens = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, tokens, seq_capacity=128)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    pos = len(prompt)
+    while len(out) < n:
+        lg, caches = model.decode_step(params, jnp.array([[tok]], jnp.int32),
+                                       jnp.array([pos], jnp.int32), caches)
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def _run_cluster(cfg, params, mode, prompts, n_new=3):
+    from repro.serving.router import RouterBackend
+    engines = [_fresh_engine(cfg, params, enable_prefix_cache=True)
+               for _ in range(2)]
+    router = RouterBackend(engines, policy=ScriptedPolicy([0] * (len(prompts)
+                                                                 - 1) + [1]),
+                           prefix_share=True, share_mode=mode,
+                           hot_threshold=1)
+    reqs = [Request(i, 0.0, list(p), max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        router.add_request(r)
+        while router.has_work:
+            router.step()
+    return router, engines, reqs
+
+
+def test_engine_zero_copy_token_identity(model_setup):
+    """ACCEPTANCE: instance B admits with borrowed rBlocks — its prefix KV
+    stays in instance A's physical pages and is served through the
+    DistAttention (o, m, l) merge in both the suffix prefill and every
+    decode step — and B's output is token-identical to the fp32 oracle AND
+    to copy-mode adoption. No payload is ever copied."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(12)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab_size, 4).tolist()
+               for _ in range(3)]
+
+    router_z, engines_z, reqs_z = _run_cluster(cfg, params, "zero_copy",
+                                               prompts)
+    assert reqs_z[2].instance_id == 1
+    assert router_z.leases_granted >= 1 and router_z.pages_borrowed >= 2
+    assert engines_z[1].prefix_cache.adopted_pages == 0, \
+        "zero_copy must not copy payloads"
+    assert reqs_z[2].num_cached_tokens == 2 * PS
+    assert not router_z.g.ledger, "every lease repaid at request finish"
+    # instance A's pages still pinned by the board (lendable), tree intact
+    assert engines_z[0].prefix_cache.num_pages >= 2
+
+    router_c, engines_c, reqs_c = _run_cluster(cfg, params, "copy", prompts)
+    assert engines_c[1].prefix_cache.adopted_pages == 2
+
+    for rz, rc, prompt in zip(reqs_z, reqs_c, prompts):
+        want = _oracle(model, params, prompt, 3)
+        assert rz.full_output == want, f"zero-copy req {rz.request_id}"
+        assert rz.full_output == rc.full_output
+
+
+def test_engine_zero_copy_long_suffix_chunks(model_setup):
+    """The borrowed prefix also feeds _prefill_chunk_fn across multiple
+    suffix chunks (remote partial merged into every chunk's attention)."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(14)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab_size, 3).tolist(),
+               prefix + rng.integers(0, cfg.vocab_size, 3).tolist(),
+               prefix + rng.integers(0, cfg.vocab_size, 20).tolist()]
+    from repro.serving.router import RouterBackend
+    engines = [_fresh_engine(cfg, params, enable_prefix_cache=True,
+                             max_tokens_per_iter=8) for _ in range(2)]
+    router = RouterBackend(engines, policy=ScriptedPolicy([0, 0, 1]),
+                           prefix_share=True, share_mode="zero_copy",
+                           hot_threshold=1)
+    reqs = [Request(i, 0.0, list(p), max_new_tokens=2)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        router.add_request(r)
+        while router.has_work:
+            router.step()
+    assert reqs[2].num_cached_tokens == 2 * PS
+    assert router.pages_borrowed >= 2
+    # 20 suffix tokens at budget 8 => 3 chunks, each merging the remote part
+    assert reqs[2].full_output == _oracle(model, params, prompts[2], 2)
+
+
+def test_engine_cannot_borrow_from_sim_home(model_setup):
+    """A sim home has no KV pools an engine could read: the engine child
+    must decline the lease, recompute, and still match the oracle."""
+    cfg, model, params = model_setup
+    from repro.serving.router import RouterBackend
+    sim = SimBackend(num_blocks=64, block_size=PS, prefix_cache=True)
+    eng = _fresh_engine(cfg, params, enable_prefix_cache=True)
+    router = RouterBackend([sim, eng], policy=ScriptedPolicy([0, 0, 1]),
+                           prefix_share=True, share_mode="zero_copy",
+                           hot_threshold=1)
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    reqs = [Request(i, 0.0, prefix +
+                    rng.integers(0, cfg.vocab_size, 3).tolist(),
+                    max_new_tokens=2) for i in range(3)]
+    for r in reqs:
+        router.add_request(r)
+        while router.has_work:
+            router.step()
+    assert reqs[2].instance_id == 1
+    assert reqs[2].num_cached_tokens == 0, "no lease from a sim home"
+    assert eng.prefix_cache.adopted_pages == 0
+    assert reqs[2].full_output == _oracle(model, params, reqs[2].prompt, 2)
