@@ -82,6 +82,9 @@ class PrefixShareBoard:
         self.on_unpin: Optional[Callable[[int, int], None]] = None
         self._clock = 0
         self.num_pages = 0
+        # telemetry: the cluster's Tracer (wired by the router — the board
+        # is coordinator state, so its events land on the router track)
+        self.trace = None
         # stats
         self.published_pages = 0
         self.publications = 0
@@ -138,6 +141,9 @@ class PrefixShareBoard:
             node = child
         self.published_pages += new
         self.publications += 1
+        if self.trace is not None:
+            self.trace.instant("board", "publish", home=instance_id, new=new,
+                               resident=self.num_pages)
         if self.max_pages is not None and self.num_pages > self.max_pages:
             self._evict(self.num_pages - self.max_pages)
         return new
@@ -178,6 +184,8 @@ class PrefixShareBoard:
             node = child
         self.lookups += 1
         self.hit_pages += len(path)
+        if self.trace is not None:
+            self.trace.instant("board", "lookup", hit_pages=len(path))
         return path
 
     # -- eviction ---------------------------------------------------------------
@@ -216,6 +224,9 @@ class PrefixShareBoard:
                 heapq.heappush(heap, (parent.last_access, seq, parent))
                 seq += 1
         self.evicted_pages += dropped
+        if self.trace is not None:
+            self.trace.instant("board", "evict", dropped=dropped,
+                               resident=self.num_pages)
         return dropped
 
     def stats(self) -> Dict[str, int]:

@@ -98,6 +98,9 @@ class RManager:
         self.peers: Dict[int, "RManager"] = {}
         self._next_rblock = 0
         self.seqs: Dict[int, SeqKV] = {}
+        # telemetry: this instance's Tracer (wired by the cluster router),
+        # or None — emission sites guard on it
+        self.trace = None
         self.heartbeat()
 
     def register_peers(self, peers: Dict[int, "RManager"]) -> None:
@@ -116,6 +119,9 @@ class RManager:
         b = self.allocator.alloc_block()
         self.g.record_loan(self.instance_id, debtor, 1)
         self.heartbeat()
+        if self.trace is not None:
+            self.trace.instant("lease", "lend", debtor=debtor, blocks=1,
+                               kind="fresh")
         return b
 
     def lend_blocks(self, debtor: int, blocks: List[int]) -> None:
@@ -133,11 +139,16 @@ class RManager:
             self.allocator.incref(b)
         self.g.record_loan(self.instance_id, debtor, len(blocks))
         self.heartbeat()
+        if self.trace is not None:
+            self.trace.instant("lease", "lend", debtor=debtor,
+                               blocks=len(blocks), kind="live")
 
     def repay(self, creditor: int, physical_id: int) -> None:
         self.peers[creditor].allocator.decref(physical_id)
         self.g.record_repayment(creditor, self.instance_id, 1)
         self.peers[creditor].heartbeat()
+        if self.trace is not None:
+            self.trace.instant("lease", "repay", creditor=creditor, blocks=1)
 
     # -- zero-copy prefix leases ---------------------------------------------------
     def borrow_blocks(self, home: int, blocks: List[int]) -> RemoteLease:
@@ -147,6 +158,9 @@ class RManager:
         if home == self.instance_id:
             raise ValueError("borrowing from oneself — serve locally instead")
         self.peers[home].lend_blocks(self.instance_id, blocks)
+        if self.trace is not None:
+            self.trace.instant("lease", "borrow", home=home,
+                               pages=len(blocks))
 
         def _repay(lease: RemoteLease) -> None:
             for b in lease.blocks:

@@ -190,11 +190,20 @@ class IterationScheduler:
         self.leases: Dict[int, object] = {}
         # prefill_first decode-page reserve (see schedule())
         self._decode_reserve = 0
+        # telemetry: a repro.core.telemetry.Tracer wired by the execution
+        # backend, or None (the default — every emission site guards on
+        # this so the disabled path allocates nothing)
+        self.trace = None
 
     # -- client API -------------------------------------------------------------
     def add_request(self, req: Request) -> None:
         req.phase = Phase.WAITING
         self.waiting.append(req)
+        tr = self.trace
+        if tr is not None:
+            tr.begin("request", "req", req.request_id,
+                     prompt_len=req.prompt_len,
+                     max_new_tokens=req.max_new_tokens)
 
     def finish(self, req: Request, now: float,
                reason: Optional[str] = None) -> None:
@@ -206,8 +215,15 @@ class IterationScheduler:
         # side must be settled before any local teardown can fault, so a
         # creditor never leaks a lent block
         lease = self.leases.pop(req.request_id, None)
+        tr = self.trace
         if lease is not None:
             lease.release()
+            if tr is not None:
+                tr.instant("lease", "release", rid=req.request_id, ts=now,
+                           tokens=lease.num_tokens, cause="finish")
+        if tr is not None:
+            tr.end("request", "req", req.request_id, ts=now,
+                   reason=req.finish_reason, generated=req.n_generated)
         if req.request_id in self.tables:
             table = self.tables[req.request_id]
             # adopt the *generated* tokens' full pages too (the prompt pages
@@ -286,12 +302,18 @@ class IterationScheduler:
         freed block table. Must run BEFORE :meth:`_preempt` frees the
         victim's table — the COW pairs are identified by their target
         blocks, which the victim still owns."""
+        tr = self.trace
         if victim in plan.decode:
             plan.decode.remove(victim)
             self._budget += 1
+            if tr is not None:
+                tr.instant("req", "decode_rescind", rid=victim.request_id)
         for c in [c for c in plan.chunks if c.req is victim]:
             plan.chunks.remove(c)
             self._budget += c.length
+            if tr is not None:
+                tr.instant("req", "chunk_rescind", rid=victim.request_id,
+                           start=c.start, length=c.length)
         if victim in plan.prefill:
             plan.prefill.remove(victim)
         # COW targets are freshly-allocated blocks exclusively owned by the
@@ -301,7 +323,11 @@ class IterationScheduler:
         table = self.tables.get(victim.request_id)
         if table is not None and plan.cow:
             owned = set(table.blocks)
+            before = len(plan.cow)
             plan.cow[:] = [p for p in plan.cow if p[1] not in owned]
+            if tr is not None and len(plan.cow) != before:
+                tr.instant("sched", "cow_rescind", rid=victim.request_id,
+                           pairs=before - len(plan.cow))
 
     def _plan_decodes(self, plan: IterationPlan) -> None:
         """Advance every running decode by one token (latency priority
@@ -342,8 +368,18 @@ class IterationScheduler:
                     self._rescind(plan, req)
                     self._preempt(req)
                     plan.preempted.append(req)
+                    if self.trace is not None:
+                        self.trace.instant("sched", "preempt",
+                                           rid=req.request_id,
+                                           trigger=req.request_id,
+                                           kind="self")
                     continue
                 plan.preempted.append(victim)
+                if self.trace is not None:
+                    self.trace.instant("sched", "preempt",
+                                       rid=victim.request_id,
+                                       trigger=req.request_id,
+                                       kind="victim")
             plan.cow.extend(self.allocator.append_tokens(table, 1))
             plan.decode.append(req)
             self._budget -= 1
@@ -352,6 +388,7 @@ class IterationScheduler:
         """Budget-sized prefill chunks for running requests admitted in an
         earlier iteration whose prompt is not fully prefilled yet. No memory
         is needed — the whole prompt's pages were reserved at admission."""
+        tr = self.trace
         for req in list(self.running):
             if self._budget <= 0:
                 break
@@ -365,6 +402,10 @@ class IterationScheduler:
             # iteration's overhead — admission is where slivers are refused
             n = min(remaining, self._budget)
             plan.chunks.append(PrefillChunk(req, req.prefilled_len, n))
+            if tr is not None:
+                tr.instant("req", "chunk", rid=req.request_id,
+                           start=req.prefilled_len, length=n,
+                           last=req.prefilled_len + n == req.prompt_len)
             req.prefilled_len += n
             if req.prefilled_len == req.prompt_len:
                 plan.prefill.append(req)
@@ -424,6 +465,10 @@ class IterationScheduler:
                     if not solo_ok:
                         if lease is not None:
                             lease.release()
+                        if self.trace is not None:
+                            self.trace.instant("sched", "refuse",
+                                               rid=req.request_id,
+                                               why="solo_wait")
                         break
                 first_chunk = need_tokens
             elif self.chunk_policy == "monolithic":
@@ -434,6 +479,11 @@ class IterationScheduler:
                 if self._budget < min(need_tokens, self.prefill_chunk_min):
                     if lease is not None:
                         lease.release()
+                    if self.trace is not None:
+                        self.trace.instant("sched", "refuse",
+                                           rid=req.request_id,
+                                           why="budget_sliver",
+                                           budget=self._budget)
                     break  # not worth starting a prefill on a sliver
                 first_chunk = min(need_tokens, self._budget)
             # lock before checking supply so eviction cannot claim the
@@ -462,6 +512,10 @@ class IterationScheduler:
                     self.allocator.free_table(table)
                 if lease is not None:
                     lease.release()
+                if self.trace is not None:
+                    self.trace.instant("sched", "refuse", rid=req.request_id,
+                                       why="no_pages", needed=needed,
+                                       avail=avail)
                 break
             self.waiting.pop(0)
             plan.cow.extend(self.allocator.append_tokens(table, need_tokens))
@@ -480,6 +534,18 @@ class IterationScheduler:
             req.phase = Phase.INITIATION
             self.running.append(req)
             plan.chunks.append(PrefillChunk(req, cached, first_chunk))
+            tr = self.trace
+            if tr is not None:
+                tr.instant("sched", "admit", rid=req.request_id,
+                           cached=cached,
+                           leased=lease.num_tokens if lease is not None else 0,
+                           chunk=first_chunk, policy=self.chunk_policy)
+                if lease is not None:
+                    tr.instant("lease", "acquire", rid=req.request_id,
+                               tokens=lease.num_tokens)
+                tr.instant("req", "chunk", rid=req.request_id, start=cached,
+                           length=first_chunk,
+                           last=cached + first_chunk == req.prompt_len)
             req.prefilled_len = cached + first_chunk
             if req.prefilled_len == req.prompt_len:
                 plan.prefill.append(req)
@@ -488,10 +554,14 @@ class IterationScheduler:
     def complete_iteration(self, plan: IterationPlan, now: float) -> List[Request]:
         """Mark phases + retire finished requests. Returns finished list."""
         finished = []
+        tr = self.trace
         for req in plan.prefill:
             req.phase = Phase.INCREMENT
             if req.first_token_time is None:
                 req.first_token_time = now
+                if tr is not None:
+                    tr.instant("req", "first_token", rid=req.request_id,
+                               ts=now)
             # adopt the prompt's full pages into the radix tree as soon as
             # their KV exists — waiting for request completion would make
             # every member of a same-prefix burst recompute the shared
@@ -530,12 +600,21 @@ class IterationScheduler:
         parent's prefill logits."""
         table = self.allocator.fork(self.tables[parent.request_id])
         self.tables[child.request_id] = table
+        tr = self.trace
+        if tr is not None:
+            tr.begin("request", "req", child.request_id,
+                     fork_of=parent.request_id,
+                     prompt_len=parent.prompt_len,
+                     max_new_tokens=child.max_new_tokens)
         lease = self.leases.get(parent.request_id)
         if lease is not None:
             # the sibling reads the same borrowed prefix: share the lease
             # (refcounted — the creditor is repaid when the last holder
             # releases)
             self.leases[child.request_id] = lease.acquire()
+            if tr is not None:
+                tr.instant("lease", "acquire", rid=child.request_id,
+                           tokens=lease.num_tokens, shared=True)
         child.prompt = list(parent.prompt)
         child.prompt_len = parent.prompt_len
         child.num_cached_tokens = parent.prompt_len  # nothing recomputed
@@ -561,6 +640,9 @@ class IterationScheduler:
         lease = self.leases.pop(req.request_id, None)
         if lease is not None:
             lease.release()
+            if self.trace is not None:
+                self.trace.instant("lease", "release", rid=req.request_id,
+                                   tokens=lease.num_tokens, cause="preempt")
         self._release_cache_path(req)
         self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:

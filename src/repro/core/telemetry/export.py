@@ -1,0 +1,181 @@
+"""Exporters: Chrome/Perfetto trace-event JSON and metrics-timeline dumps.
+
+Trace-event mapping (see the Trace Event Format spec the Chrome tools
+consume): timestamps are microseconds; ``pid`` is the serving instance
+(one process track per instance, named via ``M`` metadata); complete
+(``X``) events carry ``dur``; per-request spans use async-nestable
+``b``/``e`` pairs matched on (cat, id); counter (``C``) events render as
+stacked area tracks. Open the output in https://ui.perfetto.dev or
+``chrome://tracing``.
+
+``validate_trace_events`` is the structural schema check shared by the
+``tools/validate_trace.py`` CLI and the exporter golden tests.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+from typing import Dict, Iterable, List, Optional
+
+from .tracer import Event, PH_BEGIN, PH_COMPLETE, PH_COUNTER, PH_END, \
+    PH_INSTANT
+
+_S_TO_US = 1e6
+
+
+def to_chrome_trace(events: Iterable[Event]) -> dict:
+    """Convert tracer events to a trace-event JSON object (dict)."""
+    out: List[dict] = []
+    instances = set()
+    for e in events:
+        instances.add(e.instance)
+        te: Dict[str, object] = {
+            "name": e.name,
+            "cat": e.cat,
+            "ph": e.ph,
+            "ts": e.ts * _S_TO_US,
+            "pid": e.instance,
+            "tid": 0,
+        }
+        if e.ph == PH_COMPLETE:
+            te["dur"] = (e.dur or 0.0) * _S_TO_US
+        elif e.ph == PH_INSTANT:
+            te["s"] = "t"  # thread-scoped instant
+        elif e.ph in (PH_BEGIN, PH_END):
+            # async-nestable span keyed by request id
+            te["id"] = e.rid if e.rid is not None else 0
+        args: Dict[str, object] = dict(e.args) if e.args else {}
+        if e.ph != PH_COUNTER:
+            if e.rid is not None:
+                args.setdefault("rid", e.rid)
+            args.setdefault("iteration", e.it)
+        if args:
+            te["args"] = args
+        out.append(te)
+    # name the per-instance process tracks
+    for inst in sorted(instances):
+        out.append({
+            "name": "process_name",
+            "ph": "M",
+            "pid": inst,
+            "tid": 0,
+            "ts": 0,
+            "args": {"name": f"instance {inst}"},
+        })
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def export_chrome_trace(events: Iterable[Event], path: str) -> dict:
+    """Write trace-event JSON to ``path``; returns the exported object."""
+    obj = to_chrome_trace(events)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Metrics timelines
+
+
+def _flatten_timelines(
+        timelines: Dict[int, List[Dict[str, float]]]) -> List[Dict]:
+    """One row stream across instances, with an ``instance`` column."""
+    rows: List[Dict] = []
+    for inst in sorted(timelines):
+        for row in timelines[inst]:
+            r = {"instance": inst}
+            r.update(row)
+            rows.append(r)
+    return rows
+
+
+def export_metrics_csv(timelines: Dict[int, List[Dict[str, float]]],
+                       path: str) -> int:
+    """Write per-iteration metric rows as CSV (union of columns, blank
+    where a row lacks a metric). Returns the number of data rows."""
+    rows = _flatten_timelines(timelines)
+    lead = ["instance", "ts", "iteration"]
+    keys = sorted({k for r in rows for k in r} - set(lead))
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=lead + keys, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    return len(rows)
+
+
+def export_metrics_json(timelines: Dict[int, List[Dict[str, float]]],
+                        path: str) -> int:
+    rows = _flatten_timelines(timelines)
+    with open(path, "w") as f:
+        json.dump(rows, f)
+    return len(rows)
+
+
+# ---------------------------------------------------------------------------
+# Trace-event schema validation
+
+_KNOWN_PH = {"X", "i", "I", "b", "e", "n", "B", "E", "C", "M", "s", "t",
+             "f", "P"}
+
+
+def validate_trace_events(obj: object) -> List[str]:
+    """Structural validation of a trace-event JSON object.
+
+    Returns a list of human-readable problems (empty ⇒ valid): top-level
+    shape, required fields per event, known phase codes, non-negative
+    durations, and async ``b``/``e`` balance per (cat, id, name).
+    """
+    errors: List[str] = []
+    if isinstance(obj, dict):
+        events = obj.get("traceEvents")
+        if not isinstance(events, list):
+            return ["top-level object lacks a 'traceEvents' list"]
+    elif isinstance(obj, list):
+        events = obj
+    else:
+        return ["trace must be a JSON object with 'traceEvents' or a list"]
+
+    open_spans: Dict[tuple, int] = {}
+    for i, e in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if not isinstance(ph, str) or ph not in _KNOWN_PH:
+            errors.append(f"{where}: unknown or missing ph {ph!r}")
+            continue
+        if "name" not in e:
+            errors.append(f"{where}: missing name")
+        if ph != "M":
+            if not isinstance(e.get("ts"), (int, float)):
+                errors.append(f"{where}: missing numeric ts")
+            if "pid" not in e:
+                errors.append(f"{where}: missing pid")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)):
+                errors.append(f"{where}: complete event missing dur")
+            elif dur < 0:
+                errors.append(f"{where}: negative dur {dur}")
+        if ph in ("b", "e"):
+            if "id" not in e:
+                errors.append(f"{where}: async event missing id")
+            else:
+                key = (e.get("cat"), e.get("id"), e.get("name"))
+                if ph == "b":
+                    open_spans[key] = open_spans.get(key, 0) + 1
+                else:
+                    n = open_spans.get(key, 0)
+                    if n <= 0:
+                        errors.append(
+                            f"{where}: async end without begin for {key}")
+                    else:
+                        open_spans[key] = n - 1
+        if ph == "C" and not isinstance(e.get("args"), dict):
+            errors.append(f"{where}: counter event missing args")
+    for key, n in open_spans.items():
+        if n != 0:
+            errors.append(f"unclosed async span {key} (depth {n})")
+    return errors

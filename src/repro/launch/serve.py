@@ -34,13 +34,14 @@ def build_netmodel(args):
 
 
 def build_instance(args):
+    telemetry = bool(args.trace or args.metrics_csv)
     if args.backend == "sim":
         from repro.serving.simulator import SimBackend
         return SimBackend(num_blocks=args.pages, block_size=args.page_size,
                           max_running=args.slots,
                           prefix_cache=args.prefix_cache,
                           chunk_policy=args.chunk_policy,
-                          net=build_netmodel(args))
+                          net=build_netmodel(args), trace=telemetry)
     import jax
     from repro.models import Model
     from repro.serving.engine import EngineConfig, PagedEngine
@@ -51,7 +52,7 @@ def build_instance(args):
         num_pages=args.pages, page_size=args.page_size,
         max_slots=args.slots, use_kernel=args.use_kernel,
         enable_prefix_cache=args.prefix_cache,
-        chunk_policy=args.chunk_policy))
+        chunk_policy=args.chunk_policy, enable_telemetry=telemetry))
 
 
 def build_backend(args):
@@ -131,6 +132,14 @@ def main():
                          "model (sim backend charges payload copies and "
                          "lease RPCs; default: no network accounting, "
                          "except share-mode auto which needs the model)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable telemetry and export a Chrome/Perfetto "
+                         "trace-event JSON (open in ui.perfetto.dev or "
+                         "chrome://tracing) after the run")
+    ap.add_argument("--metrics-csv", metavar="PATH", default=None,
+                    help="enable telemetry and dump per-iteration metric "
+                         "timelines (one row per instance-iteration) as "
+                         "CSV after the run")
     args = ap.parse_args()
 
     backend = build_backend(args)
@@ -189,6 +198,13 @@ def main():
                          f"{row['adopted_pages']} adopted pages")
             print(f"  instance {i}: {row['requests']} reqs, "
                   f"{row['iterations']} iters{extra}")
+    if args.trace:
+        n = svc.export_trace(args.trace)
+        print(f"wrote {n} trace events to {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
+    if args.metrics_csv:
+        n = svc.export_metrics_csv(args.metrics_csv)
+        print(f"wrote {n} metric rows to {args.metrics_csv}")
 
 
 if __name__ == "__main__":

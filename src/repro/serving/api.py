@@ -34,6 +34,7 @@ from typing import (Dict, Iterable, Iterator, List, Optional, Protocol,
                     Sequence, Tuple, runtime_checkable)
 
 from repro.core.scheduling.request import Request
+from repro.core.telemetry import percentile
 
 # finish reasons (Request.finish_reason / RequestOutput.finish_reason)
 FINISH_STOP = "stop"                  # hit one of SamplingParams.stop_token_ids
@@ -197,6 +198,9 @@ class ServiceStats:
     # RouterBackend services: per-instance breakdown (requests placed,
     # iterations, load, cache stats), keyed by instance id
     per_instance: Optional[Dict[int, Dict]] = None
+    # telemetry-enabled backends: per-iteration metric timelines, keyed by
+    # instance id (one row per step; see repro.core.telemetry)
+    timelines: Optional[Dict[int, List[Dict]]] = None
 
     @property
     def completed_frac(self) -> float:
@@ -466,16 +470,14 @@ class LLMService:
         ttfts = [o.metrics.ttft for o in outs if o.metrics.ttft is not None]
         if ttfts:
             s.mean_ttft = sum(ttfts) / len(ttfts)
-        lats = sorted(o.metrics.normalized_latency for o in done
-                      if o.metrics.normalized_latency is not None)
+        lats = [o.metrics.normalized_latency for o in done
+                if o.metrics.normalized_latency is not None]
         if lats:
             s.mean_normalized_latency = sum(lats) / len(lats)
-            s.p99_normalized_latency = lats[
-                min(len(lats) - 1, int(0.99 * len(lats)))]
-        worst = sorted(o.metrics.max_tbt for o in done
-                       if o.metrics.max_tbt is not None)
-        if worst:
-            s.p99_tbt = worst[min(len(worst) - 1, int(0.99 * len(worst)))]
+        s.p99_normalized_latency = percentile(lats, 99)
+        worst = [o.metrics.max_tbt for o in done
+                 if o.metrics.max_tbt is not None]
+        s.p99_tbt = percentile(worst, 99)
         stalls = [max(0.0, o.metrics.max_tbt - o.metrics.tbt) for o in done
                   if o.metrics.max_tbt is not None
                   and o.metrics.tbt is not None]
@@ -497,7 +499,45 @@ class LLMService:
         inst = getattr(self.backend, "instance_stats", None)
         if inst is not None:
             s.per_instance = inst()
+        tl = self.metrics_timelines()
+        if tl:
+            s.timelines = tl
         return s
+
+    # -- telemetry ----------------------------------------------------------------
+
+    def metrics_timelines(self) -> Dict[int, List[Dict]]:
+        """Per-instance metric timelines from a telemetry-enabled backend
+        (empty when telemetry is off). Routers report one timeline per
+        child instance; single backends report under instance 0."""
+        fn = getattr(self.backend, "metrics_timelines", None)
+        if fn is not None:
+            return fn()
+        m = getattr(self.backend, "metrics", None)
+        return {0: m.rows()} if m is not None else {}
+
+    def trace_events(self) -> list:
+        """All tracer events from a telemetry-enabled backend (empty when
+        telemetry is off), merged across instances for routers."""
+        fn = getattr(self.backend, "trace_events", None)
+        if fn is not None:
+            return fn()
+        tr = getattr(self.backend, "trace", None)
+        return tr.events() if tr is not None else []
+
+    def export_trace(self, path: str) -> int:
+        """Write the backend's trace as Chrome/Perfetto trace-event JSON
+        (open in https://ui.perfetto.dev). Returns the event count."""
+        from repro.core.telemetry import export_chrome_trace
+        events = self.trace_events()
+        export_chrome_trace(events, path)
+        return len(events)
+
+    def export_metrics_csv(self, path: str) -> int:
+        """Write per-iteration metric timelines as CSV (one row per
+        instance-iteration). Returns the row count."""
+        from repro.core.telemetry import export_metrics_csv
+        return export_metrics_csv(self.metrics_timelines(), path)
 
 
 def _metrics_of(req: Request) -> RequestMetrics:

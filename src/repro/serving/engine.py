@@ -69,6 +69,7 @@ from repro.core.paging.allocator import BlockAllocator, BlockTable
 from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.iteration import IterationScheduler
 from repro.core.scheduling.request import Phase, Request
+from repro.core.telemetry import MetricsRegistry, Tracer
 from repro.kernels import ops, ref
 from repro.models import Model
 from repro.models import sampling
@@ -115,6 +116,10 @@ class EngineConfig:
     # whole prompt prefills in one iteration alongside the decodes), or
     # "solo" (legacy: over-budget prompts wait for an idle engine)
     chunk_policy: str = "decode_first"
+    # structured event tracing + per-iteration metric timelines
+    # (repro.core.telemetry) on this engine's wall clock. Off by default —
+    # the disabled path constructs no event objects at all.
+    enable_telemetry: bool = False
 
 
 class PagedEngine:
@@ -169,6 +174,16 @@ class PagedEngine:
         # modeled network seconds (payload copies / lease RPCs) — a
         # wall-clock engine cannot advance time, so observability only
         self.net_time = 0.0
+        # telemetry: events are stamped off the caller-supplied `now` (the
+        # tracer's mutable .now, updated each step) with jitted-call
+        # durations measured on the monotonic clock
+        if ecfg.enable_telemetry:
+            self.trace = Tracer()
+            self.metrics = MetricsRegistry()
+            self.scheduler.trace = self.trace
+        else:
+            self.trace = None
+            self.metrics = None
         self._window = cfg.sliding_window \
             if self.model.plan[0].attn_kind == "swa" else None
 
@@ -421,6 +436,8 @@ class PagedEngine:
         wall-clock engine cannot advance its clock, so this only feeds the
         ``net_time`` stat (the virtual-clock SimBackend advances time)."""
         self.net_time += seconds
+        if self.trace is not None:
+            self.trace.instant("net", "charge", seconds=seconds)
 
     # -- zero-copy remote prefixes (borrowed rBlocks) -----------------------------
 
@@ -543,6 +560,14 @@ class PagedEngine:
     def step(self, now: Optional[float] = None) -> List[Request]:
         """Run ONE iteration (ORCA's unit of scheduling)."""
         now = time.monotonic() if now is None else now
+        tr = self.trace
+        t_wall0 = 0.0
+        if tr is not None:
+            # scheduler events default to `now`; sub-iteration slices
+            # (chunk executions) are offset by elapsed monotonic time
+            tr.now = now
+            tr.iteration = self.iterations
+            t_wall0 = time.monotonic()
         plan = self.scheduler.schedule()
         if self._lease_kv_cache:  # drop gathers of released leases
             self._prune_lease_cache()
@@ -601,11 +626,18 @@ class PagedEngine:
                 rk = jnp.zeros((self.nlayers, 0, self.cfg.num_kv_heads,
                                 self.cfg.head_dim), self.k_pages.dtype)
                 rv = rk
+            t_chunk0 = time.monotonic() if tr is not None else 0.0
             logits, self.k_pages, self.v_pages = self._prefill_chunk_fn(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(tok_arr)[None], jnp.asarray(page_arr),
                 jnp.int32(ch.start), jnp.int32(ch.length), jnp.int32(r_base),
                 rk, rv)
+            if tr is not None:
+                tr.complete("engine", "chunk", rid=req.request_id,
+                            ts=now + (t_chunk0 - t_wall0),
+                            dur=time.monotonic() - t_chunk0,
+                            start=ch.start, length=ch.length,
+                            last=ch.is_last)
             if ch.is_last:
                 tok, lp = self._sample_one(req, logits)
                 self._emit(req, slot, tok, lp, now)
@@ -657,6 +689,29 @@ class PagedEngine:
         for req in finished:
             if req.request_id in self.slots:
                 self.free_slots.append(self.slots.pop(req.request_id))
+        if tr is not None:
+            dur = time.monotonic() - t_wall0
+            tr.complete("engine", "iteration", ts=now, dur=dur,
+                        tokens=plan.token_count(),
+                        decodes=len(plan.decode), chunks=len(plan.chunks))
+            m = self.metrics
+            m.gauge("kv_util_frac",
+                    self.allocator.num_used / self.allocator.num_blocks)
+            m.gauge("prefill_backlog_tokens",
+                    self.scheduler.prefill_backlog_tokens())
+            m.gauge("budget_fill_frac",
+                    plan.token_count() / self.scheduler.max_tokens)
+            m.gauge("running", len(self.scheduler.running))
+            m.gauge("waiting", len(self.scheduler.waiting))
+            m.gauge("net_time_s", self.net_time)
+            if self.prefix_cache is not None:
+                m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
+            m.count("tokens", plan.token_count())
+            m.count("decode_tokens", len(plan.decode))
+            m.count("prefill_tokens", sum(c.length for c in plan.chunks))
+            m.count("preemptions", len(plan.preempted))
+            m.observe("iteration_time_s", dur)
+            m.snapshot(now, self.iterations)
         self.iterations += 1
         return finished
 
@@ -674,6 +729,9 @@ class PagedEngine:
                 self.slots[child.request_id] = slot
                 child.scheduled_time = now
                 child.first_token_time = now
+                if self.trace is not None:
+                    self.trace.instant("req", "first_token",
+                                       rid=child.request_id)
                 tok, lp = self._sample_one(child, logits)
                 self._emit(child, slot, tok, lp, now)
                 forked.append(child)

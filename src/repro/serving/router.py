@@ -67,6 +67,7 @@ from repro.core.distkv.gmanager import GManager, Heartbeat
 from repro.core.distkv.netmodel import NetworkModel
 from repro.core.distkv.rmanager import RManager
 from repro.core.scheduling.request import Request
+from repro.core.telemetry import Tracer, merge_events
 
 SHARE_MODES = ("copy", "zero_copy", "auto")
 
@@ -248,6 +249,26 @@ class RouterBackend:
                     child.scheduler.prefix_importer = self._make_importer(i)
             if share_mode != "copy":
                 self._wire_zero_copy()
+        # telemetry: children constructed with tracing enabled each carry a
+        # Tracer — assign them per-instance track ids, give the router its
+        # own track (placement, board, network events) one past the last
+        # child, and point each rManager/board at the right tracer. All
+        # merged onto one timeline by trace_events().
+        self.trace = None
+        traced = [getattr(c, "trace", None) for c in self.children]
+        if any(t is not None for t in traced):
+            for i, t in enumerate(traced):
+                if t is not None:
+                    t.instance = i
+            # with all-virtual children clock() is the cluster frontier;
+            # with wall-clock children it is None — router events then sit
+            # at t=0 unless stamped explicitly (add_request passes ts)
+            self.trace = Tracer(
+                clock=lambda: self.clock() or 0.0,
+                instance=len(self.children))
+            self.g.prefix_board.trace = self.trace
+            for i, rm in self.rms.items():
+                rm.trace = traced[i]
         self._heartbeat_all()
 
     def _wire_zero_copy(self) -> None:
@@ -335,13 +356,23 @@ class RouterBackend:
             if write is not None and adopted:
                 write([b for _, b in adopted],
                       [pages[idx].payload for idx, _ in adopted])
-            if adopted and self.net is not None:
-                # payload transfer is not free: serialization + wire time
-                # per copied page (virtual children advance their clock,
-                # engines record net_time)
-                charge = getattr(child, "charge_network", None)
-                if charge is not None:
-                    charge(self.net.page_copy_time(len(adopted)))
+            if adopted:
+                if self.net is not None:
+                    # payload transfer is not free: serialization + wire
+                    # time per copied page (virtual children advance their
+                    # clock, engines record net_time)
+                    charge = getattr(child, "charge_network", None)
+                    if charge is not None:
+                        charge(self.net.page_copy_time(len(adopted)))
+                    m = getattr(child, "metrics", None)
+                    if m is not None:
+                        m.count("net_bytes",
+                                len(adopted) * self.net.page_bytes)
+                if self.trace is not None:
+                    self.trace.instant(
+                        "net", "copy", dst=i, pages=len(adopted),
+                        bytes=len(adopted) * self.net.page_bytes
+                        if self.net is not None else 0)
             return len(adopted)
 
         return importer
@@ -397,6 +428,13 @@ class RouterBackend:
                     charge = getattr(child, "charge_network", None)
                     if charge is not None:
                         charge(self.net.lease_time(l.num_pages))
+                m = getattr(child, "metrics", None)
+                if m is not None:
+                    m.count("borrowed_pages", l.num_pages)
+                if self.trace is not None:
+                    self.trace.instant("net", "lease",
+                                       rid=req.request_id, debtor=i,
+                                       home=l.home, pages=l.num_pages)
 
             lease._on_commit = on_commit
             return lease
@@ -425,6 +463,14 @@ class RouterBackend:
             # virtual child idle in the past: it cannot serve a request
             # before the request exists
             child.advance_to(req.arrival_time)
+        if self.trace is not None:
+            clk = child.clock()
+            self.trace.instant(
+                "router", "place", rid=req.request_id,
+                ts=clk if clk is not None else req.arrival_time,
+                instance=i,
+                policy=getattr(self.policy, "name",
+                               type(self.policy).__name__))
         child.add_request(req)
 
     # -- ServingBackend protocol -------------------------------------------------
@@ -507,6 +553,23 @@ class RouterBackend:
             agg.num_pages += pc.num_pages
             agg.adopted_pages += pc.adopted_pages
         return agg if seen else None
+
+    def trace_events(self):
+        """All child tracers' events plus the router's own (placement,
+        board, network) merged onto one timestamp-ordered timeline."""
+        return merge_events(
+            [getattr(c, "trace", None) for c in self.children] +
+            [self.trace])
+
+    def metrics_timelines(self) -> Dict[int, List[Dict]]:
+        """Per-instance metric timelines (instance -> per-iteration rows)
+        for traced children."""
+        out: Dict[int, List[Dict]] = {}
+        for i, c in enumerate(self.children):
+            m = getattr(c, "metrics", None)
+            if m is not None:
+                out[i] = m.rows()
+        return out
 
     def instance_stats(self) -> Dict[int, Dict[str, float]]:
         """Per-instance breakdown for ``LLMService.stats``."""

@@ -34,6 +34,7 @@ from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.batch import BatchScheduler
 from repro.core.scheduling.iteration import IterationScheduler
 from repro.core.scheduling.request import Phase, Request
+from repro.core.telemetry import MetricsRegistry, Tracer, percentile
 
 
 @dataclasses.dataclass
@@ -82,6 +83,10 @@ class SimResult:
     # modeled network time spent on copies + lease RPCs
     borrowed_pages: int = 0
     net_time: float = 0.0
+    # telemetry (``trace=True`` runs only): merged tracer events on the
+    # virtual clock, and per-instance metric timelines (instance -> rows)
+    events: Optional[List] = None
+    timelines: Optional[Dict[int, List[Dict]]] = None
 
     @property
     def max_tbts(self) -> np.ndarray:
@@ -94,8 +99,7 @@ class SimResult:
     def p99_tbt(self) -> float:
         """P99 of per-request worst inter-token gaps: a decode stalled
         behind a solo long prefill dominates this tail."""
-        ts = self.max_tbts
-        return float(np.percentile(ts, 99)) if len(ts) else float("inf")
+        return float(percentile(self.max_tbts, 99))
 
     @property
     def finished(self) -> List[Request]:
@@ -123,8 +127,7 @@ class SimResult:
 
     @property
     def p99_normalized_latency(self) -> float:
-        ls = self.normalized_latencies
-        return float(np.percentile(ls, 99)) if len(ls) else float("inf")
+        return float(percentile(self.normalized_latencies, 99))
 
     @property
     def throughput_tokens_per_s(self) -> float:
@@ -268,7 +271,8 @@ class SimBackend:
                  max_preemptions: Optional[int] = None,
                  chunk_policy: str = "decode_first",
                  cost: Optional[CostModel] = None,
-                 net: Optional[NetworkModel] = None):
+                 net: Optional[NetworkModel] = None,
+                 trace: bool = False):
         self.cost = cost or CostModel()
         # network/serialization model for cross-instance KV movement: the
         # router charges payload copies / lease RPCs via charge_network, and
@@ -293,6 +297,15 @@ class SimBackend:
         self.preemptions = 0
         self.peak_memory_frac = 0.0
         self._utils: List[float] = []
+        # telemetry: events are stamped through the VIRTUAL clock, so a
+        # traced sim run is perfectly reproducible (no wall time anywhere)
+        if trace:
+            self.trace = Tracer(clock=self.clock)
+            self.metrics = MetricsRegistry()
+            self.scheduler.trace = self.trace
+        else:
+            self.trace = None
+            self.metrics = None
 
     # -- ServingBackend protocol ----------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -314,8 +327,13 @@ class SimBackend:
         at copy-mode adoption, lease RPC at borrow)."""
         self._now += seconds
         self.net_time += seconds
+        if self.trace is not None:
+            self.trace.instant("net", "charge", seconds=seconds)
 
     def step(self, now: Optional[float] = None) -> List[Request]:
+        tr = self.trace
+        if tr is not None:
+            tr.iteration = self.iterations
         plan = self.scheduler.schedule()
         self.preemptions += len(plan.preempted)
         if plan.empty:
@@ -346,6 +364,7 @@ class SimBackend:
             sum_ctx += self.cost.prefill_read_tokens(c.start - rb, c.length)
             sum_remote += c.length * rb
             n_borrowing += 1 if rb else 0
+        t_start = self._now
         self._now += self.cost.iteration_time(plan.token_count(), sum_ctx,
                                               sum_remote)
         if self.net is not None and n_borrowing:
@@ -362,9 +381,35 @@ class SimBackend:
             r.record_token_time(self._now)
             if r.first_token_time is None:
                 r.first_token_time = self._now
+                if tr is not None:
+                    tr.instant("req", "first_token", rid=r.request_id)
             if r.scheduled_time is None:
                 r.scheduled_time = self._now
         finished = self.scheduler.complete_iteration(plan, self._now)
+        if tr is not None:
+            tr.complete("engine", "iteration", ts=t_start,
+                        dur=self._now - t_start, tokens=plan.token_count(),
+                        decodes=len(plan.decode), chunks=len(plan.chunks),
+                        ctx=sum_ctx, remote=sum_remote)
+        if self.metrics is not None:
+            m = self.metrics
+            m.gauge("kv_util_frac",
+                    self.allocator.num_used / self.allocator.num_blocks)
+            m.gauge("prefill_backlog_tokens",
+                    self.scheduler.prefill_backlog_tokens())
+            m.gauge("budget_fill_frac",
+                    plan.token_count() / self.scheduler.max_tokens)
+            m.gauge("running", len(self.scheduler.running))
+            m.gauge("waiting", len(self.scheduler.waiting))
+            m.gauge("net_time_s", self.net_time)
+            if self.prefix_cache is not None:
+                m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
+            m.count("tokens", plan.token_count())
+            m.count("decode_tokens", len(plan.decode))
+            m.count("prefill_tokens", sum(c.length for c in plan.chunks))
+            m.count("preemptions", len(plan.preempted))
+            m.observe("iteration_time_s", self._now - t_start)
+            m.snapshot(self._now, self.iterations)
         self.iterations += 1
         self.peak_memory_frac = max(
             self.peak_memory_frac,
@@ -384,7 +429,8 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    max_tokens_per_iter: int = 8192,
                    prefix_cache: bool = False,
                    chunk_policy: str = "decode_first",
-                   cost: Optional[CostModel] = None) -> SimResult:
+                   cost: Optional[CostModel] = None,
+                   trace: bool = False) -> SimResult:
     """Replay ``requests`` through :class:`SimBackend` behind the LLMService
     front-end (one drive loop for engine and simulator alike).
 
@@ -400,7 +446,7 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                          max_running=max_running,
                          max_tokens_per_iter=max_tokens_per_iter,
                          prefix_cache=prefix_cache,
-                         chunk_policy=chunk_policy, cost=cost)
+                         chunk_policy=chunk_policy, cost=cost, trace=trace)
     svc = LLMService(backend)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -412,6 +458,9 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
     if backend.prefix_cache is not None:
         res.prefix_hit_rate = backend.prefix_cache.hit_rate
         res.cached_pages = backend.prefix_cache.num_pages
+    if backend.trace is not None:
+        res.events = backend.trace.events()
+        res.timelines = {0: backend.metrics.rows()}
     return res
 
 
@@ -428,7 +477,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                     max_preemptions: Optional[int] = None,
                     chunk_policy: str = "decode_first",
                     cost: Optional[CostModel] = None,
-                    net: Optional[NetworkModel] = None) -> SimResult:
+                    net: Optional[NetworkModel] = None,
+                    trace: bool = False) -> SimResult:
     """Virtual-clock cluster sim: N :class:`SimBackend` instances behind a
     :class:`~repro.serving.router.RouterBackend`, driven to completion
     through the LLMService front-end. The event-driven router advances the
@@ -451,7 +501,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                            max_tokens_per_iter=max_tokens_per_iter,
                            prefix_cache=prefix_cache,
                            max_preemptions=max_preemptions,
-                           chunk_policy=chunk_policy, cost=cost, net=net)
+                           chunk_policy=chunk_policy, cost=cost, net=net,
+                           trace=trace)
                 for _ in range(n_instances)]
     router = RouterBackend(children, policy=policy,
                            prefix_share=prefix_share,
@@ -479,6 +530,9 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
         res.adopted_pages = agg.adopted_pages
     res.borrowed_pages = router.pages_borrowed
     res.net_time = sum(getattr(c, "net_time", 0.0) for c in children)
+    if trace:
+        res.events = router.trace_events()
+        res.timelines = router.metrics_timelines()
     return res
 
 
