@@ -41,6 +41,7 @@ def main() -> None:
     import benchmarks.serving_fig9 as serving_fig9
     import benchmarks.serving_fig10 as serving_fig10
     import benchmarks.chunked_prefill_sweep as chunked_prefill_sweep
+    import benchmarks.disagg_sweep as disagg_sweep
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
     import benchmarks.router_sweep as router_sweep
@@ -149,6 +150,25 @@ def main() -> None:
               "decode_first_p99_tbt_s":
                   next(r for r in rows if r["workload"] == "mixed-long"
                        and r["policy"] == "decode_first")["p99_tbt"]})
+
+    bench("disagg_sweep",
+          "disagg_sweep (prefill/decode disaggregation frontier)",
+          disagg_sweep.run,
+          {"n_requests": 80 if smoke else 200,
+           "rates": disagg_sweep.SMOKE_RATES if smoke
+           else disagg_sweep.RATES},
+          disagg_sweep.headline,
+          lambda rows: {
+              "p99_tbt": {f"{r['system']}@{r['rate']:g}": r["p99_tbt"]
+                          for r in rows},
+              "throughput": {f"{r['system']}@{r['rate']:g}": r["throughput"]
+                             for r in rows},
+              "handoffs_leased": sum(r.get("handoffs_leased", 0)
+                                     for r in rows
+                                     if r["system"] == "disagg-2p2d"),
+              "handoffs_migrated": sum(r.get("handoffs_migrated", 0)
+                                       for r in rows
+                                       if r["system"] == "disagg-2p2d")})
 
     bench("prefix_cache_sweep", "prefix_cache_sweep (radix KV reuse)",
           prefix_cache_sweep.run,

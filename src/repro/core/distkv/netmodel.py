@@ -68,8 +68,18 @@ class NetworkModel:
         return self.lease_time(n_pages) + est_decode_tokens * per_iter
 
     def prefer_borrow(self, n_pages: int, page_size: int,
-                      est_decode_tokens: int) -> bool:
-        """The ``share_mode="auto"`` decision for one admission."""
+                      est_decode_tokens: int,
+                      expected_reuse: float = 1.0) -> bool:
+        """The ``share_mode="auto"`` decision for one admission.
+
+        ``expected_reuse`` amortizes the one-time copy across the requests
+        expected to hit the same prefix on this instance (the share board's
+        per-(instance, prefix) lease hit-count plus this one): a prefix that
+        keeps getting leased tips toward copying, because the payload
+        transfer is paid once while every borrower pays merge overhead for
+        its whole decode. ``expected_reuse=1`` is the original myopic
+        per-request decision."""
+        copy_amortized = self.page_copy_time(n_pages) / max(expected_reuse,
+                                                            1.0)
         return self.borrow_lifetime_cost(
-            n_pages, page_size, est_decode_tokens) < \
-            self.page_copy_time(n_pages)
+            n_pages, page_size, est_decode_tokens) < copy_amortized

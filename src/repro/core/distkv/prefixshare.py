@@ -60,6 +60,11 @@ class PublishedPage:
         dataclasses.field(default_factory=dict)
     parent: Optional["PublishedPage"] = None
     last_access: int = 0
+    # per-borrower lease hit-count: instance id -> #times that instance has
+    # served this page through a RemoteLease. The router's auto decision
+    # reads it as the expected-reuse estimate (repeat traffic amortizes a
+    # copy), and promote-to-copy triggers off it.
+    lease_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class PrefixShareBoard:
@@ -187,6 +192,30 @@ class PrefixShareBoard:
         if self.trace is not None:
             self.trace.instant("board", "lookup", hit_pages=len(path))
         return path
+
+    def record_lease(self, instance_id: int,
+                     pages: Sequence[PublishedPage]) -> int:
+        """Count one committed lease by ``instance_id`` over ``pages``.
+
+        Returns the updated hit-count of the *deepest* page — the value the
+        router uses as the (instance, prefix) reuse estimate, since the
+        deepest page identifies the full leased prefix."""
+        n = 0
+        for page in pages:
+            n = page.lease_hits.get(instance_id, 0) + 1
+            page.lease_hits[instance_id] = n
+        if self.trace is not None:
+            self.trace.instant("board", "lease_hit", instance=instance_id,
+                               pages=len(pages), hits=n)
+        return n
+
+    def lease_hits_of(self, instance_id: int,
+                      pages: Sequence[PublishedPage]) -> int:
+        """Prior lease count of ``instance_id`` on a matched chain (the
+        deepest page's count — 0 if the chain is empty or never leased)."""
+        if not pages:
+            return 0
+        return pages[-1].lease_hits.get(instance_id, 0)
 
     # -- eviction ---------------------------------------------------------------
     def _evict(self, n: int) -> int:

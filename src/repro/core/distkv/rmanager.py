@@ -37,7 +37,14 @@ class RemoteLease:
     request; :meth:`release` repays the creditor (one ``decref`` + ledger
     repayment per block). ``acquire`` refcounts the lease so a COW-forked
     best-of-n sibling can share its parent's borrowed prefix — the creditor
-    is repaid exactly once, when the last holder releases."""
+    is repaid exactly once, when the last holder releases.
+
+    Two grant sites exist: admission-time prefix adoption (lease capped at
+    ``prompt_len - 1`` so the final prompt token's logits are computed
+    locally) and the disaggregated KV handoff (``serving/disagg.py``),
+    where the lease covers *all* full prompt pages — the prefill host
+    already sampled the first token, so the decode host needs no local
+    prompt KV beyond the copied partial tail page."""
 
     home: int                 # creditor instance the pages live on
     debtor: int

@@ -142,7 +142,8 @@ class IterationScheduler:
                  prefix_importer: Optional[
                      Callable[[Sequence[int], int], int]] = None,
                  remote_adopter: Optional[
-                     Callable[[Request, int], Optional[object]]] = None):
+                     Callable[[Request, int], Optional[object]]] = None,
+                 prefill_only: bool = False):
         if chunk_policy not in CHUNK_POLICIES:
             raise ValueError(f"chunk_policy must be one of {CHUNK_POLICIES}, "
                              f"got {chunk_policy!r}")
@@ -181,6 +182,11 @@ class IterationScheduler:
         # match, or None. Tried BEFORE the copy importer; when a lease is
         # granted the copy path is skipped for this admission.
         self.remote_adopter = remote_adopter
+        # disaggregated serving: a prefill-role instance never plans decode
+        # tokens — a request whose prefill completed parks in ``running``
+        # (Phase.INCREMENT) until a KVHandoff coordinator moves its KV to a
+        # decode instance via release_request()/install_running()
+        self.prefill_only = prefill_only
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
@@ -284,7 +290,7 @@ class IterationScheduler:
                 for r in self.running
                 if r.request_id in self.tables
                 and r.prefilled_len >= r.prompt_len) \
-                if self.decode_reserve else 0
+                if self.decode_reserve and not self.prefill_only else 0
             self._plan_continuations(plan)
             self._plan_admissions(plan)
             self._decode_reserve = 0
@@ -332,6 +338,8 @@ class IterationScheduler:
     def _plan_decodes(self, plan: IterationPlan) -> None:
         """Advance every running decode by one token (latency priority
         within its budget slice), preempting under page pressure."""
+        if self.prefill_only:
+            return  # disaggregated prefill role: decode happens elsewhere
         # under prefill_first this runs AFTER the chunk planners: a request
         # whose final chunk is planned this very iteration must not also be
         # granted a decode token (it samples its first token from the
@@ -435,6 +443,16 @@ class IterationScheduler:
                     if lease is not None and lease.num_tokens <= cached:
                         lease.release()  # not longer than the local match
                         lease = None
+                    if lease is None:
+                        # the adopter may have materialized the peer's pages
+                        # locally (promote-to-copy after N leases) instead
+                        # of granting a lease — re-match so this admission
+                        # hits the fresh local pages
+                        repath = self.prefix_cache.match(
+                            req.prompt, max_tokens=req.prompt_len - 1)
+                        if len(repath) > len(path):
+                            path = repath
+                            cached = len(repath) * bs
                 if lease is not None:
                     # zero-copy admission: positions [0, lease.num_tokens)
                     # are served from the creditor's pages through the
@@ -589,6 +607,36 @@ class IterationScheduler:
                     self.finish(req, now, reason="preempted-dropped")
                     finished.append(req)
         return finished
+
+    # -- disaggregated handoff ------------------------------------------------
+    def release_request(self, req: Request) -> None:
+        """Detach a prefill-complete request from this scheduler WITHOUT
+        finishing it (the prefill side of a KV handoff). The caller must
+        have secured the KV first — exported page payloads for a migration,
+        or lent the blocks (increfs) for a zero-copy lease — because the
+        local block table is freed here. The request's telemetry span stays
+        open: it ends on the instance that finishes the decode."""
+        lease = self.leases.pop(req.request_id, None)
+        if lease is not None:  # repay any creditor before local frees
+            lease.release()
+        self._release_cache_path(req)
+        table = self.tables.pop(req.request_id, None)
+        if table is not None:
+            self.allocator.free_table(table)
+        if req in self.running:
+            self.running.remove(req)
+
+    def install_running(self, req: Request, table: BlockTable,
+                        lease: Optional[object] = None) -> None:
+        """Adopt a request mid-flight (the decode side of a KV handoff):
+        its prompt KV already exists — in ``table``'s local pages (migrate)
+        and/or on the creditor instance under ``lease`` (zero-copy). The
+        request enters decode directly; no admission, no prefill."""
+        req.phase = Phase.INCREMENT
+        self.tables[req.request_id] = table
+        if lease is not None:
+            self.leases[req.request_id] = lease
+        self.running.append(req)
 
     # -- best-of-n forks ------------------------------------------------------
     def fork_from(self, parent: Request, child: Request) -> BlockTable:

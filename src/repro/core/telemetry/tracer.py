@@ -44,8 +44,13 @@ Event vocabulary (``cat``/``name``; ``args`` carry cause attribution):
 ``board``             publication board: ``publish`` / ``lookup`` /
                       ``evict``
 ``net``               modeled network charges: ``charge`` (seconds),
-                      ``copy`` / ``lease`` RPCs (router)
+                      ``copy`` / ``lease`` RPCs, ``promote`` (leased
+                      prefix materialized locally) (router)
 ``router``            ``place``: placement decision + policy
+``handoff``           disaggregated prefill->decode KV move: async ``kv``
+                      span per request, begun at the prefill host's clock
+                      (``src``/``dst``/``mode``/``pages``) and ended at
+                      the decode host's once the transfer is charged
 ``engine``            per-iteration ``iteration`` complete events (one
                       track per instance), engine ``chunk`` executions
 ====================  =====================================================

@@ -9,6 +9,8 @@ cross-instance prefix sharing via ``--prefix-share``).
   PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 200
   PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 400 \
       --instances 4 --policy prefix_affinity --prefix-cache --prefix-share
+  PYTHONPATH=src python -m repro.launch.serve --backend sim --requests 200 \
+      --roles 2p2d --handoff-mode auto
 """
 
 from __future__ import annotations
@@ -55,6 +57,24 @@ def build_instance(args):
         chunk_policy=args.chunk_policy, enable_telemetry=telemetry))
 
 
+def parse_roles_arg(args):
+    """Validate --roles early with a launcher-grade error (SystemExit, not
+    a traceback), and reconcile it with --instances."""
+    if args.roles is None:
+        return None
+    from repro.serving.disagg import parse_role_spec
+    try:
+        roles = parse_role_spec(args.roles)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
+    if args.instances > 1 and args.instances != len(roles):
+        raise SystemExit(
+            f"error: --roles {args.roles!r} names {len(roles)} instances "
+            f"but --instances is {args.instances} — drop --instances (the "
+            f"spec sets the count) or make them agree")
+    return roles
+
+
 def build_backend(args):
     if args.prefix_share and not args.prefix_cache:
         raise SystemExit("--prefix-share requires --prefix-cache")
@@ -64,15 +84,23 @@ def build_backend(args):
     if args.share_mode != "copy" and not args.prefix_share:
         raise SystemExit("--share-mode zero_copy/auto requires "
                          "--prefix-share")
+    roles = parse_roles_arg(args)
+    if roles is not None:
+        args.instances = len(roles)
     if args.instances <= 1:
         return build_instance(args)
     from repro.serving.router import RouterBackend
     children = [build_instance(args) for _ in range(args.instances)]
-    return RouterBackend(children, policy=args.policy,
-                         prefix_share=args.prefix_share,
-                         share_mode=args.share_mode,
-                         board_pages=args.board_pages,
-                         net=build_netmodel(args))
+    try:
+        return RouterBackend(children, policy=args.policy,
+                             prefix_share=args.prefix_share,
+                             share_mode=args.share_mode,
+                             board_pages=args.board_pages,
+                             net=build_netmodel(args),
+                             roles=roles,
+                             handoff_mode=args.handoff_mode)
+    except ValueError as e:  # e.g. a role spec with no decode instance
+        raise SystemExit(f"error: {e}")
 
 
 def main():
@@ -112,6 +140,18 @@ def main():
                     choices=("round_robin", "least_loaded",
                              "prefix_affinity"),
                     help="router placement policy")
+    ap.add_argument("--roles", default=None, metavar="SPEC",
+                    help="disaggregated prefill/decode roles as "
+                         "<count><p|d|m> groups, e.g. '2p2d' = 2 prefill + "
+                         "2 decode instances; implies the instance count. "
+                         "Prompts land on prefill instances, finished KV "
+                         "is handed to decode instances")
+    from repro.serving.disagg import HANDOFF_MODES
+    ap.add_argument("--handoff-mode", default="auto", choices=HANDOFF_MODES,
+                    help="how prefill->decode KV handoff moves the prompt "
+                         "KV: migrate page payloads, zero_copy lease the "
+                         "prefill host's pages in place, or auto "
+                         "(per-request network-cost decision)")
     ap.add_argument("--prefix-share", action="store_true",
                     help="publish hot radix paths through the distkv board "
                          "so instances adopt each other's cached prefixes "
@@ -190,6 +230,12 @@ def main():
         print(f"zero-copy: {backend.leases_granted} leases, "
               f"{backend.pages_borrowed} pages served remotely "
               f"(share mode: {args.share_mode})")
+    ho = getattr(backend, "handoff", None)
+    if ho is not None:
+        print(f"disagg: {ho.handoffs_migrated} migrated + "
+              f"{ho.handoffs_leased} leased KV handoffs "
+              f"({ho.pages_copied} pages copied, {ho.pages_leased} leased, "
+              f"{ho.deferrals} deferrals; mode: {args.handoff_mode})")
     if stats.per_instance:
         for i, row in sorted(stats.per_instance.items()):
             extra = ""

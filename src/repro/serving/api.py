@@ -201,6 +201,9 @@ class ServiceStats:
     # telemetry-enabled backends: per-iteration metric timelines, keyed by
     # instance id (one row per step; see repro.core.telemetry)
     timelines: Optional[Dict[int, List[Dict]]] = None
+    # disaggregated routers: the same rows grouped per instance role
+    # (prefill / decode / mixed) — the per-role split of the cluster
+    role_timelines: Optional[Dict[str, List[Dict]]] = None
 
     @property
     def completed_frac(self) -> float:
@@ -502,6 +505,11 @@ class LLMService:
         tl = self.metrics_timelines()
         if tl:
             s.timelines = tl
+        rt = getattr(self.backend, "role_timelines", None)
+        if rt is not None:
+            grouped = rt()
+            if grouped:
+                s.role_timelines = grouped
         return s
 
     # -- telemetry ----------------------------------------------------------------

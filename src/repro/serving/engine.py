@@ -766,6 +766,38 @@ class PagedEngine:
         self.k_pages = self.k_pages.at[:, idx].set(k)
         self.v_pages = self.v_pages.at[:, idx].set(v)
 
+    # -- disaggregated prefill/decode handoff -------------------------------------
+
+    @property
+    def free_decode_slots(self) -> int:
+        """Decode slots a KVHandoff placement can still claim."""
+        return min(len(self.free_slots),
+                   self.scheduler.max_running - len(self.scheduler.running))
+
+    def release_for_handoff(self, req: Request) -> None:
+        """Prefill side of a KV handoff: return the request's decode slot
+        and detach it from the scheduler WITHOUT finishing. The caller must
+        already have secured the KV (exported payloads / lent the blocks)."""
+        slot = self.slots.pop(req.request_id, None)
+        if slot is not None:
+            self.free_slots.append(slot)
+        self.scheduler.release_request(req)
+
+    def install_for_handoff(self, req: Request, table: BlockTable,
+                            lease=None) -> None:
+        """Decode side of a KV handoff: claim a slot and enter decode
+        directly. ``table`` holds the locally-materialized KV pages (all of
+        them under migration; only the partial tail page under a zero-copy
+        lease, whose full pages stay on the prefill host)."""
+        if lease is not None:
+            self._check_zero_copy_ok()
+        slot = self.free_slots.pop()
+        self.slots[req.request_id] = slot
+        # the decode input token is the first token, sampled on the prefill
+        # instance from its final chunk's logits
+        self.last_token[slot] = req.output[-1]
+        self.scheduler.install_running(req, table, lease)
+
     def run_to_completion(self, max_iters: int = 10_000) -> None:
         for _ in range(max_iters):
             self.step()

@@ -50,6 +50,15 @@ placement.
 copies and lease RPCs against their clock, wall-clock engines record them
 as ``net_time``.
 
+Disaggregated prefill/decode serving layers *roles* on top: pass
+``InstanceSpec``-wrapped children and/or ``roles="2p2d"`` and the router
+places new prompts only on prefill-capable instances, parks prefill-only
+schedulers in ``prefill_only`` mode, and runs a
+:class:`~repro.serving.disagg.KVHandoff` coordinator at the top of every
+step that moves finished prompt KV to a decode instance (migrated payloads
+or a zero-copy ``RemoteLease``, ``handoff_mode`` choosing per request in
+``auto``). See ``serving/disagg.py`` for the full design.
+
 Clock semantics: with all-virtual children (SimBackend) the router is
 event-driven — each ``step`` advances the laggard instance, and ``clock()``
 reports the cluster frontier, so policy sweeps over many instances run in
@@ -68,6 +77,8 @@ from repro.core.distkv.netmodel import NetworkModel
 from repro.core.distkv.rmanager import RManager
 from repro.core.scheduling.request import Request
 from repro.core.telemetry import Tracer, merge_events
+from repro.serving.disagg import (HANDOFF_MODES, InstanceSpec, KVHandoff,
+                                  parse_role_spec)
 
 SHARE_MODES = ("copy", "zero_copy", "auto")
 
@@ -195,7 +206,10 @@ class RouterBackend:
                  hot_threshold: int = 1,
                  board_pages: Optional[int] = None,
                  net: Optional[NetworkModel] = None,
-                 gmanager: Optional[GManager] = None):
+                 gmanager: Optional[GManager] = None,
+                 roles: Optional[Union[str, Sequence[str]]] = None,
+                 handoff_mode: str = "auto",
+                 promote_after: Optional[int] = None):
         if not children:
             raise ValueError("RouterBackend needs at least one child backend")
         if share_mode not in SHARE_MODES:
@@ -204,14 +218,40 @@ class RouterBackend:
         if share_mode != "copy" and not prefix_share:
             raise ValueError("share_mode needs prefix_share=True "
                              "(there is nothing to serve without the board)")
-        self.children = list(children)
+        # role-tagged membership: children may be bare backends (role
+        # "mixed" — the previous N-identical-children behavior) or
+        # InstanceSpec wrappers; roles= applies a spec ("2p2d") on top
+        specs = [c if isinstance(c, InstanceSpec) else InstanceSpec(c)
+                 for c in children]
+        if roles is not None:
+            role_list = parse_role_spec(roles)
+            if len(role_list) != len(specs):
+                raise ValueError(
+                    f"roles spec names {len(role_list)} instances but "
+                    f"{len(specs)} children were supplied")
+            specs = [InstanceSpec(s.backend, role)
+                     for s, role in zip(specs, role_list)]
+        self.children = [s.backend for s in specs]
+        self.roles = [s.role for s in specs]
+        self.disaggregated = any(r != "mixed" for r in self.roles)
+        self.prefill_capable = [i for i, r in enumerate(self.roles)
+                                if r in ("prefill", "mixed")]
+        self.decode_capable = [i for i, r in enumerate(self.roles)
+                               if r in ("decode", "mixed")]
+        self.prefill_only = [i for i, r in enumerate(self.roles)
+                             if r == "prefill"]
         self.policy = POLICIES[policy]() if isinstance(policy, str) else \
             policy
         self.prefix_share = prefix_share
         self.share_mode = share_mode
-        # auto needs a cost model to decide; zero_copy/copy work without
-        # one (network then costs nothing on virtual clocks)
-        self.net = net or (NetworkModel() if share_mode == "auto" else None)
+        self.promote_after = promote_after
+        self.promotions = 0
+        # auto needs a cost model to decide, and disaggregation charges the
+        # handoff transfer; zero_copy/copy work without one (network then
+        # costs nothing on virtual clocks)
+        self.net = net or (NetworkModel()
+                           if share_mode == "auto" or self.disaggregated
+                           else None)
         self.hot_threshold = hot_threshold
         # board_pages: size cap for the publication board (LRU page
         # eviction) — ignored when an explicit gmanager is supplied
@@ -249,6 +289,42 @@ class RouterBackend:
                     child.scheduler.prefix_importer = self._make_importer(i)
             if share_mode != "copy":
                 self._wire_zero_copy()
+        # disaggregated prefill/decode: park prefill-only schedulers in
+        # prefill_only mode and stand up the KV handoff coordinator
+        self.handoff = None
+        self.handoff_zc_ok = False
+        if self.disaggregated:
+            if not self.prefill_capable:
+                raise ValueError(
+                    "role spec has no prefill-capable (prefill/mixed) "
+                    "instance to place prompts on")
+            if not self.decode_capable:
+                raise ValueError(
+                    "role spec has no decode-capable (decode/mixed) "
+                    "instance to hand finished KV to")
+            if handoff_mode not in HANDOFF_MODES:
+                raise ValueError(
+                    f"handoff_mode must be one of {HANDOFF_MODES}, "
+                    f"got {handoff_mode!r}")
+            kinds = {hasattr(c, "k_pages") for c in self.children}
+            if len(kinds) > 1:
+                raise ValueError(
+                    "disaggregated roles need homogeneous children (all "
+                    "engines or all sims): prompt KV cannot move between "
+                    "a cost-model sim and a real engine")
+            zc_capable = all(getattr(c, "_window", None) is None
+                             for c in self.children)
+            if handoff_mode == "zero_copy" and not zc_capable:
+                raise ValueError(
+                    "zero_copy handoff is unsupported with sliding-window "
+                    "attention children (the remote partial ignores the "
+                    "window) — use handoff_mode='migrate' or 'auto'")
+            self.handoff_zc_ok = zc_capable
+            if handoff_mode != "migrate" and zc_capable:
+                self._wire_rmanagers()
+            for i in self.prefill_only:
+                self.children[i].scheduler.prefill_only = True
+            self.handoff = KVHandoff(self, mode=handoff_mode)
         # telemetry: children constructed with tracing enabled each carry a
         # Tracer — assign them per-instance track ids, give the router its
         # own track (placement, board, network events) one past the last
@@ -271,23 +347,37 @@ class RouterBackend:
                 rm.trace = traced[i]
         self._heartbeat_all()
 
-    def _wire_zero_copy(self) -> None:
-        """Borrowed-rBlock serving: per-instance rManagers over the shared
-        gManager (debt ledger), board pins so a home cannot free a
-        published (lendable) page, creditor pool readers on engine
-        children, and the schedulers' remote_adopter hooks."""
+    def _wire_rmanagers(self) -> None:
+        """Per-instance rManagers over the shared gManager (debt ledger)
+        plus creditor pool readers on engine children — the substrate both
+        zero-copy prefix serving and leased KV handoffs run on. Idempotent:
+        prefix sharing and disaggregation may each ask for it."""
+        if self.rms:
+            return
         self.rms = {i: RManager(i, c.allocator, self.g)
                     for i, c in enumerate(self.children)}
         for rm in self.rms.values():
             rm.register_peers(self.rms)
+        for child in self.children:
+            if hasattr(child, "k_pages"):  # engine: needs creditor pools
+                child.remote_reader = self._read_pools
+
+    def _wire_zero_copy(self) -> None:
+        """Borrowed-rBlock serving: rManagers (:meth:`_wire_rmanagers`),
+        board pins so a home cannot free a published (lendable) page, and
+        the schedulers' remote_adopter hooks."""
+        self._wire_rmanagers()
         board = self.g.prefix_board
         board.on_pin = \
             lambda home, block: self.children[home].allocator.incref(block)
         board.on_unpin = \
             lambda home, block: self.children[home].allocator.decref(block)
         for i, child in enumerate(self.children):
-            if hasattr(child, "k_pages"):  # engine: needs creditor pools
-                child.remote_reader = self._read_pools
+            if self.roles[i] == "prefill":
+                # a prefill-only child never decodes a leased prefix; an
+                # admission lease here would have to chain through the KV
+                # handoff — keep its prefix reuse on the copy/local paths
+                continue
             child.scheduler.remote_adopter = self._make_remote_adopter(i)
 
     def _read_pools(self, home: int):
@@ -409,9 +499,20 @@ class RouterBackend:
                 return None  # a sim home has no KV an engine could read
             if len(usable) * pc.page_size <= local_tokens:
                 return None  # the local tree already matches at least as far
+            board = self.g.prefix_board
+            prior = board.lease_hits_of(i, usable)
+            if self.promote_after is not None \
+                    and prior >= self.promote_after \
+                    and self._promote_to_copy(i, home, usable):
+                return None  # prefix now lives here — serve it locally
             if self.share_mode == "auto" and not self.net.prefer_borrow(
-                    len(usable), pc.page_size, req.max_new_tokens):
-                return None  # copying pays off — let the importer run
+                    len(usable), pc.page_size, req.max_new_tokens,
+                    expected_reuse=prior + 1):
+                # copying pays off — let the importer run. The board's
+                # (instance, prefix) lease hit-count is the reuse estimate:
+                # the copy is paid once but amortized over the repeats this
+                # prefix has already demonstrated on this instance.
+                return None
             try:
                 lease = self.rms[i].borrow_blocks(
                     home, [p.block for p in usable])
@@ -424,6 +525,7 @@ class RouterBackend:
                 # inflate the stats nor re-charge the RPC on every retry
                 self.leases_granted += 1
                 self.pages_borrowed += l.num_pages
+                board.record_lease(i, usable)
                 if self.net is not None:
                     charge = getattr(child, "charge_network", None)
                     if charge is not None:
@@ -441,11 +543,54 @@ class RouterBackend:
 
         return adopter
 
+    def _promote_to_copy(self, i: int, home: int, pages) -> int:
+        """Promote a repeatedly-leased remote prefix to a local copy: adopt
+        the chain into instance ``i``'s radix tree and fill the fresh blocks
+        straight from the creditor's physical pages (board payloads are None
+        under ``zero_copy`` publishing — the pages themselves are pinned, so
+        they are the source of truth). One payload transfer ends the
+        pay-the-merge-forever pathology; outstanding leases drain as their
+        requests finish, and future admissions hit the local tree. Returns
+        #pages materialized (0 = could not promote, fall back to leasing)."""
+        child = self.children[i]
+        home_child = self.children[home]
+        write = getattr(child, "import_page_payloads", None)
+        exp = getattr(home_child, "export_page_payload", None)
+        if write is not None and exp is None:
+            return 0  # an engine cannot materialize from a sim creditor
+        pc = child.prefix_cache
+        tokens = [t for page in pages for t in page.key]
+        adopted = pc.adopt(tokens)
+        if not adopted:
+            return 0
+        if write is not None:
+            write([b for _, b in adopted],
+                  [exp(pages[idx].block) for idx, _ in adopted])
+        if self.net is not None:
+            charge = getattr(child, "charge_network", None)
+            if charge is not None:
+                charge(self.net.page_copy_time(len(adopted)))
+            m = getattr(child, "metrics", None)
+            if m is not None:
+                m.count("net_bytes", len(adopted) * self.net.page_bytes)
+        self.promotions += 1
+        if self.trace is not None:
+            self.trace.instant("net", "promote", dst=i, home=home,
+                               pages=len(adopted))
+        return len(adopted)
+
     # -- placement -------------------------------------------------------------
 
     def place(self, req: Request) -> int:
-        """Pick an instance for ``req`` (exposed for tests/benchmarks)."""
-        return self.policy.choose(req, self.children)
+        """Pick an instance for ``req`` (exposed for tests/benchmarks).
+        With roles active only prefill-capable instances are candidates —
+        decode-only instances receive work through the KV handoff, never
+        from the front door."""
+        cand = self.prefill_capable
+        if len(cand) == len(self.children):
+            return self.policy.choose(req, self.children)
+        sub = [self.children[i] for i in cand]
+        return cand[self.policy.choose(req, sub)]
 
     def add_request(self, req: Request) -> None:
         if req.parent_id is not None and req.parent_id in self._placement:
@@ -502,6 +647,11 @@ class RouterBackend:
 
     def step(self, now: Optional[float] = None) -> List[Request]:
         finished: List[Request] = []
+        if self.handoff is not None:
+            # prefill->decode handoffs drain before children step: a fully
+            # parked prefill instance makes no progress of its own, so an
+            # after-step hook would never see it
+            self.handoff.drain()
         if self._virtual:
             # event-driven: advance the laggard instance that can actually
             # make progress (a stuck instance — e.g. a prompt that can never
@@ -563,12 +713,31 @@ class RouterBackend:
 
     def metrics_timelines(self) -> Dict[int, List[Dict]]:
         """Per-instance metric timelines (instance -> per-iteration rows)
-        for traced children."""
+        for traced children. With roles active each row is tagged with its
+        instance's role, so one CSV export separates prefill iterations
+        from decode iterations."""
         out: Dict[int, List[Dict]] = {}
         for i, c in enumerate(self.children):
             m = getattr(c, "metrics", None)
             if m is not None:
-                out[i] = m.rows()
+                rows = m.rows()
+                if self.disaggregated:
+                    rows = [dict(row, role=self.roles[i]) for row in rows]
+                out[i] = rows
+        return out
+
+    def role_timelines(self) -> Dict[str, List[Dict]]:
+        """Per-role metric split: every traced child's rows tagged with
+        their instance and merged time-ordered under the instance's role.
+        Under disaggregation the two shapes are the whole story — prefill
+        tracks show budget-sized chunk iterations, decode tracks show small
+        pure-decode iterations."""
+        out: Dict[str, List[Dict]] = {}
+        for i, rows in self.metrics_timelines().items():
+            out.setdefault(self.roles[i], []).extend(
+                dict(row, instance=i) for row in rows)
+        for rows in out.values():
+            rows.sort(key=lambda row: row.get("ts", 0.0))
         return out
 
     def instance_stats(self) -> Dict[int, Dict[str, float]]:
@@ -583,6 +752,8 @@ class RouterBackend:
                 "running": len(c.scheduler.running),
                 "free_pages": c.allocator.num_free,
             }
+            if self.disaggregated:
+                row["role"] = self.roles[i]
             pc = getattr(c, "prefix_cache", None)
             if pc is not None:
                 row["prefix_hit_rate"] = pc.hit_rate

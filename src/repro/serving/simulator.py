@@ -83,6 +83,11 @@ class SimResult:
     # modeled network time spent on copies + lease RPCs
     borrowed_pages: int = 0
     net_time: float = 0.0
+    # disaggregated runs: prefill->decode KV handoffs by path, and the
+    # per-role metric timelines (role -> time-ordered rows)
+    handoffs_migrated: int = 0
+    handoffs_leased: int = 0
+    role_timelines: Optional[Dict[str, List[Dict]]] = None
     # telemetry (``trace=True`` runs only): merged tracer events on the
     # virtual clock, and per-instance metric timelines (instance -> rows)
     events: Optional[List] = None
@@ -533,6 +538,73 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
     if trace:
         res.events = router.trace_events()
         res.timelines = router.metrics_timelines()
+    return res
+
+
+def simulate_disagg(requests: Sequence[Request], *, roles: str = "2p2d",
+                    handoff_mode: str = "auto",
+                    policy: str = "least_loaded",
+                    prefix_cache: bool = True,
+                    blocks_per_instance: int = 1800, block_size: int = 16,
+                    max_running: int = 64,
+                    max_tokens_per_iter: int = 8192,
+                    max_preemptions: Optional[int] = None,
+                    chunk_policy: str = "decode_first",
+                    cost: Optional[CostModel] = None,
+                    net: Optional[NetworkModel] = None,
+                    trace: bool = False) -> SimResult:
+    """Disaggregated prefill/decode cluster sim: role-tagged
+    :class:`SimBackend` instances behind the router's
+    :class:`~repro.serving.disagg.KVHandoff` coordinator.
+
+    ``roles`` is a ``parse_role_spec`` string (``"2p2d"`` = 2 prefill + 2
+    decode instances) or role-name list; the instance count comes from it.
+    New prompts land only on prefill-capable instances, finished prompt KV
+    moves to a decode instance per ``handoff_mode`` (``migrate`` |
+    ``zero_copy`` | ``auto``), and ``net`` (defaulted by the router when
+    omitted) charges the transfer against the virtual clocks — the frontier
+    against mixed-instance chunked prefill is only honest with the handoff
+    cost on the books. Decode instances run pure decode iterations, which
+    is the P99-TBT story ``benchmarks/disagg_sweep.py`` measures."""
+    from repro.serving.api import LLMService  # late: api imports Request
+    from repro.serving.disagg import parse_role_spec
+    from repro.serving.router import RouterBackend
+
+    role_list = parse_role_spec(roles)
+    children = [SimBackend(num_blocks=blocks_per_instance,
+                           block_size=block_size, max_running=max_running,
+                           max_tokens_per_iter=max_tokens_per_iter,
+                           prefix_cache=prefix_cache,
+                           max_preemptions=max_preemptions,
+                           chunk_policy=chunk_policy, cost=cost, net=net,
+                           trace=trace)
+                for _ in role_list]
+    router = RouterBackend(children, policy=policy, roles=role_list,
+                           handoff_mode=handoff_mode, net=net)
+    svc = LLMService(router)
+    for r in sorted(requests, key=lambda r: r.arrival_time):
+        svc.submit_request(r)
+    svc.drain()
+    utils = [c.kv_utilization for c in children if c._utils]
+    res = SimResult(list(requests), makespan=router.clock(),
+                    peak_memory_frac=max(c.peak_memory_frac
+                                         for c in children),
+                    kv_utilization=float(np.mean(utils)) if utils else 1.0,
+                    preemptions=router.preemptions,
+                    per_instance=router.instance_stats())
+    agg = router.prefix_cache
+    if agg is not None:
+        res.prefix_hit_rate = agg.hit_rate
+        res.cached_pages = agg.num_pages
+        res.adopted_pages = agg.adopted_pages
+    res.borrowed_pages = router.pages_borrowed
+    res.net_time = sum(getattr(c, "net_time", 0.0) for c in children)
+    res.handoffs_migrated = router.handoff.handoffs_migrated
+    res.handoffs_leased = router.handoff.handoffs_leased
+    if trace:
+        res.events = router.trace_events()
+        res.timelines = router.metrics_timelines()
+        res.role_timelines = router.role_timelines()
     return res
 
 

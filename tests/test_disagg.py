@@ -1,0 +1,345 @@
+"""Disaggregated prefill/decode serving: roles, placement, KV handoff.
+
+Covers the PR's acceptance criteria and satellites: role-spec parsing and
+launcher-grade validation, the expected-reuse amortization in the borrow-
+vs-copy decision (lease hit-counts on the share board), promote-to-copy
+after N leases, the sim cluster end-to-end (frontier machinery +
+trace-conservation: every ``handoff.kv`` begin has its end, lease
+acquire/release balance per (instance, request) no matter which host
+finishes), and the token identity of a request whose prompt KV was
+prefilled on instance P and decoded on instance D — for the migrate AND
+the zero-copy (leased, DistAttention-merged) handoff paths — vs the
+single-instance fp32 oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distkv import NetworkModel
+from repro.core.distkv.prefixshare import PrefixShareBoard
+from repro.core.scheduling import Phase, Request
+from repro.core.telemetry.tracer import PH_BEGIN, PH_END
+from repro.serving.disagg import (HANDOFF_MODES, InstanceSpec,
+                                  parse_role_spec)
+from repro.serving.simulator import (SimBackend, make_workload,
+                                     simulate_disagg)
+
+PS = 8  # page size for the engine tests
+
+
+# -- role specs ------------------------------------------------------------------
+
+def test_parse_role_spec_grammar():
+    assert parse_role_spec("2p2d") == ["prefill"] * 2 + ["decode"] * 2
+    assert parse_role_spec("1p1d1m") == ["prefill", "decode", "mixed"]
+    assert parse_role_spec("10d") == ["decode"] * 10
+    assert parse_role_spec(" 2P1D ") == ["prefill"] * 2 + ["decode"]
+    # a role-name list passes through validated
+    assert parse_role_spec(["prefill", "mixed"]) == ["prefill", "mixed"]
+
+
+@pytest.mark.parametrize("bad", ["", "2pXd", "pd", "2x", "2p 2d", "p2"])
+def test_parse_role_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError, match="malformed"):
+        parse_role_spec(bad)
+
+
+def test_parse_role_spec_rejects_zero_and_unknown():
+    with pytest.raises(ValueError, match="zero instances"):
+        parse_role_spec("0p")
+    with pytest.raises(ValueError, match="unknown role"):
+        parse_role_spec(["prefill", "gpu"])
+    with pytest.raises(ValueError, match="role"):
+        InstanceSpec(backend=None, role="router")
+
+
+def test_router_role_validation():
+    from repro.serving.router import RouterBackend
+    sims = [SimBackend(num_blocks=32, block_size=8) for _ in range(2)]
+    with pytest.raises(ValueError, match="decode"):
+        RouterBackend(sims, roles="2p")  # nobody could ever decode
+    with pytest.raises(ValueError, match="prefill"):
+        RouterBackend(sims, roles="2d")  # nobody admits a prompt
+    with pytest.raises(ValueError, match="2"):
+        RouterBackend(sims, roles="1p2d")  # count != len(children)
+    with pytest.raises(ValueError, match="handoff_mode"):
+        RouterBackend(sims, roles="1p1d", handoff_mode="rdma")
+    # all-mixed spec is exactly the old router: no handoff coordinator
+    r = RouterBackend(sims, roles="2m")
+    assert r.handoff is None and not r.disaggregated
+
+
+# -- expected-reuse amortization (satellite) -------------------------------------
+
+def test_prefer_borrow_amortizes_copy_over_expected_reuse():
+    """SATELLITE: the borrow-vs-copy decision was myopic — it charged the
+    full payload copy to the single request at hand, so a prefix leased
+    over and over never flipped to a copy. Amortized over the observed
+    lease count, a popular prefix flips."""
+    net = NetworkModel()
+    # one short-decode request on its own: the copy never pays off
+    assert net.prefer_borrow(32, 16, est_decode_tokens=16)
+    # the Nth identical request: the same copy split N ways does pay off
+    assert not net.prefer_borrow(32, 16, est_decode_tokens=16,
+                                 expected_reuse=200)
+    # neutral default: expected_reuse=1 is exactly the old decision
+    assert net.prefer_borrow(32, 16, est_decode_tokens=16,
+                             expected_reuse=1.0) == \
+        net.prefer_borrow(32, 16, est_decode_tokens=16)
+
+
+def test_board_counts_lease_hits_per_instance():
+    board = PrefixShareBoard()
+    toks = list(range(16))
+    board.publish(0, toks, [None, None], 8, blocks=[4, 5])
+    pages = board.match(toks)
+    assert board.lease_hits_of(1, pages) == 0
+    assert board.record_lease(1, pages) == 1
+    assert board.record_lease(1, pages) == 2
+    # counts are per borrowing instance: 2's history is its own
+    assert board.lease_hits_of(2, pages) == 0
+    assert board.lease_hits_of(1, pages) == 2
+    assert board.lease_hits_of(1, []) == 0
+
+
+def test_promote_to_copy_after_n_leases():
+    """SATELLITE: after ``promote_after`` leases of the same prefix by the
+    same instance, the router materializes a local copy (one transfer) and
+    stops leasing — ending the pay-the-merge-every-iteration pathology."""
+    from repro.serving.router import RouterBackend
+
+    class ToOne:
+        def choose(self, req, children):
+            return 1 if len(children) > 1 else 0
+
+    sims = [SimBackend(num_blocks=64, block_size=8, prefix_cache=True)
+            for _ in range(2)]
+    router = RouterBackend(sims, policy=ToOne(), prefix_share=True,
+                           share_mode="zero_copy", hot_threshold=1,
+                           promote_after=2, net=NetworkModel())
+    prefix = list(range(1000, 1016))  # 2 pages at bs=8
+
+    def serve(rid, route_to):
+        router.policy = route_to
+        r = Request(rid, 0.0, prefix + [rid] * 3, max_new_tokens=2)
+        router.add_request(r)
+        while router.has_work:
+            router.step()
+        return r
+
+    class ToZero:
+        def choose(self, req, children):
+            return 0
+
+    serve(0, ToZero())  # warm instance 0's radix tree
+    serve(1, ToZero())  # second local hit crosses hot_threshold: publish
+    leased = [serve(i, ToOne()) for i in (2, 3)]  # two leases -> hits = 2
+    assert router.leases_granted == 2 and router.promotions == 0
+    assert all(r.num_cached_tokens == 16 for r in leased)
+    promoted = serve(4, ToOne())  # prior hits >= promote_after: copy
+    assert router.promotions == 1
+    assert router.leases_granted == 2, "the promoted request must not lease"
+    assert sims[1].prefix_cache.adopted_pages == 2
+    assert promoted.num_cached_tokens >= 16, "admission hits the fresh copy"
+    assert not router.g.ledger, "all leases repaid"
+
+
+# -- sim cluster end-to-end ------------------------------------------------------
+
+def _mixed_wl(n=40, rate=30.0, seed=3):
+    return make_workload(n, rate=rate, dist="sharegpt", seed=seed,
+                         max_len=320, long_frac=0.1, long_len=2048)
+
+
+def test_sim_disagg_end_to_end():
+    res = simulate_disagg(_mixed_wl(), roles="2p2d", handoff_mode="auto",
+                          blocks_per_instance=512, block_size=16,
+                          max_tokens_per_iter=512)
+    assert res.completed_frac == 1.0
+    assert res.handoffs_migrated + res.handoffs_leased > 0
+    # prompts land only on prefill instances; decode instances get all
+    # their requests through the handoff
+    for i, row in res.per_instance.items():
+        if row["role"] == "decode":
+            assert row["requests"] == 0
+    # no outstanding lease debt once everything drained
+    for row in res.per_instance.values():
+        assert row.get("borrowed_pages", 0) == 0
+        assert row.get("lent_pages", 0) == 0
+
+
+def test_sim_disagg_modes_generate_same_tokens():
+    """The handoff mode moves KV differently but must not change WHAT is
+    generated (the sim emits one token per granted iteration either way)."""
+    results = [simulate_disagg(_mixed_wl(), roles="2p2d", handoff_mode=m,
+                               blocks_per_instance=512, block_size=16,
+                               max_tokens_per_iter=512)
+               for m in HANDOFF_MODES]
+    for res in results:
+        assert res.completed_frac == 1.0
+    for ra, rb in zip(results[0].requests, results[1].requests):
+        assert ra.total_generated == rb.total_generated
+    for ra, rb in zip(results[0].requests, results[2].requests):
+        assert ra.total_generated == rb.total_generated
+
+
+def test_sim_disagg_trace_conservation():
+    """ACCEPTANCE (telemetry): every ``handoff.kv`` begin span has a
+    matching end for the same request, and lease acquire/release instants
+    balance per (instance, request) even though a leased handoff acquires
+    on the decode host while the prefill host granted the pages."""
+    res = simulate_disagg(_mixed_wl(n=50), roles="2p2d",
+                          handoff_mode="zero_copy",
+                          blocks_per_instance=512, block_size=16,
+                          max_tokens_per_iter=512, trace=True)
+    assert res.completed_frac == 1.0 and res.handoffs_leased > 0
+    begins, ends = {}, {}
+    acq, rel = {}, {}
+    for ev in res.events:
+        if ev.cat == "handoff" and ev.name == "kv":
+            d = begins if ev.ph == PH_BEGIN else ends
+            d[ev.rid] = d.get(ev.rid, 0) + 1
+        if ev.cat == "lease" and ev.rid is not None:
+            if ev.name == "acquire":
+                acq[(ev.instance, ev.rid)] = \
+                    acq.get((ev.instance, ev.rid), 0) + 1
+            elif ev.name == "release":
+                rel[(ev.instance, ev.rid)] = \
+                    rel.get((ev.instance, ev.rid), 0) + 1
+    assert begins and begins == ends, "unbalanced handoff spans"
+    assert acq == rel, "lease acquire/release must balance per " \
+        "(instance, request)"
+    # handoff spans begin at the prefill host's clock and end at the decode
+    # host's, but never run backwards on the merged timeline
+    spans = {}
+    for ev in res.events:
+        if ev.cat == "handoff":
+            spans.setdefault(ev.rid, {})[ev.ph] = ev.ts
+    assert all(s[PH_END] >= s[PH_BEGIN] for s in spans.values())
+
+
+def test_sim_disagg_role_timelines_split():
+    res = simulate_disagg(_mixed_wl(), roles="2p2d", handoff_mode="auto",
+                          blocks_per_instance=512, block_size=16,
+                          max_tokens_per_iter=512, trace=True)
+    assert set(res.role_timelines) == {"prefill", "decode"}
+    for role, rows in res.role_timelines.items():
+        assert rows, f"no metric rows for {role} instances"
+        ts = [row.get("ts", 0.0) for row in rows]
+        assert ts == sorted(ts)
+    # decode instances never run a prefill chunk; prefill instances never
+    # decode — the split is the whole point of the role tags
+    pre = res.role_timelines["prefill"]
+    dec = res.role_timelines["decode"]
+    assert sum(r.get("decode_tokens", 0) for r in pre) == 0
+    assert sum(r.get("prefill_tokens", 0) for r in dec) == 0
+    assert sum(r.get("decode_tokens", 0) for r in dec) > 0
+
+
+# -- engine: cross-instance handoff token identity (ACCEPTANCE) ------------------
+
+def _fresh_engine(cfg, params, **kw):
+    from repro.serving.engine import EngineConfig, PagedEngine
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("max_slots", 4)
+    return PagedEngine(cfg, params, EngineConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def model_setup():
+    from repro.configs import smoke_config
+    from repro.models import Model
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None, logits_fp32=True)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _oracle(model, params, prompt, n):
+    tokens = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, tokens, seq_capacity=128)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    pos = len(prompt)
+    while len(out) < n:
+        lg, caches = model.decode_step(params, jnp.array([[tok]], jnp.int32),
+                                       jnp.array([pos], jnp.int32), caches)
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def _run_disagg_cluster(cfg, params, mode, prompts, n_new=4):
+    from repro.serving.router import RouterBackend
+    engines = [_fresh_engine(cfg, params) for _ in range(2)]
+    router = RouterBackend(engines, roles=["prefill", "decode"],
+                           handoff_mode=mode)
+    reqs = [Request(i, 0.0, list(p), max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        router.add_request(r)
+        while router.has_work:
+            router.step()
+    return router, engines, reqs
+
+
+def test_engine_handoff_migrate_token_identity(model_setup):
+    """ACCEPTANCE: prompt KV prefilled on P, payload-migrated to D, decoded
+    there — token-identical to the single-instance fp32 oracle. Covers the
+    page-aligned and partial-tail-page prompt shapes and the first-decode
+    seam (input = first sampled token, position = prompt_len)."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (2 * PS, 2 * PS + 4)]  # tail-less and tailed
+    router, engines, reqs = _run_disagg_cluster(cfg, params, "migrate",
+                                                prompts)
+    assert router.handoff.handoffs_migrated == 2
+    assert router.handoff.handoffs_leased == 0
+    for r, prompt in zip(reqs, prompts):
+        assert r.phase == Phase.FINISHED
+        assert r.instance_id == 1, "decode must have moved to the D host"
+        assert r.full_output == _oracle(model, params, prompt, 4)
+    # migration is a full KV move: nothing borrowed, nothing left pinned
+    assert not router.g.ledger
+    assert engines[1].allocator.num_free == 64, "D freed all pages"
+
+
+def test_engine_handoff_zero_copy_token_identity(model_setup):
+    """ACCEPTANCE: the handoff lease covers ALL full prompt pages (the
+    first token was already sampled on P) and D's every decode step merges
+    P's pages through DistAttention — token-identical to the oracle, and
+    every lease repaid at finish."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (2 * PS, 2 * PS + 4)]
+    router, engines, reqs = _run_disagg_cluster(cfg, params, "zero_copy",
+                                                prompts)
+    assert router.handoff.handoffs_leased == 2
+    assert router.handoff.pages_leased == 4, "all full pages leased"
+    assert router.handoff.pages_copied == 1, "only the partial tail copied"
+    for r, prompt in zip(reqs, prompts):
+        assert r.phase == Phase.FINISHED
+        assert r.instance_id == 1
+        assert r.full_output == _oracle(model, params, prompt, 4)
+    assert not router.g.ledger, "every handoff lease repaid at finish"
+
+
+def test_engine_handoff_skips_single_token_requests(model_setup):
+    """max_new_tokens=1 finishes on the prefill host with its sampled
+    token — there is no decode left to hand off."""
+    cfg, model, params = model_setup
+    rng = np.random.default_rng(35)
+    prompt = rng.integers(0, cfg.vocab_size, 2 * PS + 2).tolist()
+    router, engines, reqs = _run_disagg_cluster(cfg, params, "auto",
+                                                [prompt], n_new=1)
+    assert router.handoff.handoffs == 0
+    assert reqs[0].instance_id == 0
+    assert reqs[0].full_output == _oracle(model, params, prompt, 1)
