@@ -45,6 +45,7 @@ def main() -> None:
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
     import benchmarks.roofline_report as roofline_report
     import benchmarks.router_sweep as router_sweep
+    import benchmarks.swap_sweep as swap_sweep
     import benchmarks.zero_copy_sweep as zero_copy_sweep
 
     ap = argparse.ArgumentParser(description="run all paper benchmarks")
@@ -169,6 +170,24 @@ def main() -> None:
               "handoffs_migrated": sum(r.get("handoffs_migrated", 0)
                                        for r in rows
                                        if r["system"] == "disagg-2p2d")})
+
+    bench("swap_sweep", "swap_sweep (swap-to-host vs recompute crossover)",
+          swap_sweep.run,
+          {},  # the two operating points are already CI-sized
+          swap_sweep.headline,
+          lambda rows: {
+              "long_throughput": {
+                  r["system"]: r["throughput"] for r in rows
+                  if r["point"] == "long" and "throughput" in r},
+              "long_p99_norm_lat": {
+                  r["system"]: r["p99_norm_lat"] for r in rows
+                  if r["point"] == "long" and "p99_norm_lat" in r},
+              "short_throughput": {
+                  r["system"]: r["throughput"] for r in rows
+                  if r["point"] == "short" and "throughput" in r},
+              "reprefill_ok": not next(
+                  r for r in rows if r["system"] == "proof"
+              )["reprefill_problems"]})
 
     bench("prefix_cache_sweep", "prefix_cache_sweep (radix KV reuse)",
           prefix_cache_sweep.run,

@@ -45,6 +45,19 @@ class NetworkModel:
     # partials, so this is coordination cost, not a page read — mirrors
     # CostModel.c_remote)
     c_remote_token: float = 6e-9
+    # host swap lane: device<->host page movement rides PCIe, not the
+    # interconnect. 256 Gb/s = 32 GB/s, a PCIe 5.0 x16 link's practical
+    # throughput; t_swap_fixed covers the DMA setup per batched transfer
+    pcie_gbps: float = 256.0
+    t_swap_fixed: float = 20e-6
+
+    def swap_time(self, n_pages: int) -> float:
+        """One direction of a swap: ``n_pages`` over PCIe plus one DMA
+        setup. A swap round trip (out now, in later) costs twice this."""
+        if n_pages <= 0:
+            return 0.0
+        wire = self.page_bytes * 8.0 / (self.pcie_gbps * 1e9)
+        return self.t_swap_fixed + n_pages * wire
 
     def page_copy_time(self, n_pages: int) -> float:
         """One-time payload transfer of ``n_pages`` (copy-mode adoption)."""

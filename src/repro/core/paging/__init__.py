@@ -1,2 +1,3 @@
 from repro.core.paging.allocator import (  # noqa: F401
-    BlockAllocator, BlockTable, ContiguousPreallocAllocator, OutOfBlocks)
+    BlockAllocator, BlockTable, ContiguousPreallocAllocator, OutOfBlocks,
+    OutOfHostBlocks)

@@ -5,6 +5,19 @@ block table. Reference counting enables parallel-sampling / beam-search
 sharing: forked sequences share prompt pages until a write triggers
 copy-on-write. Utilization statistics feed the paper's "ORCA uses only
 20.4–38.2% of KV memory" comparison (benchmarks/kv_utilization.py).
+
+Host swap tier. With ``host_blocks > 0`` the allocator also tracks a pool of
+host-memory pages so preemption can *swap* a victim's KV out over PCIe
+instead of sacrificing it to recompute: :meth:`swap_out` moves a table's
+device pages to host blocks (device refs dropped — pages a radix tree or a
+fork sibling still references survive on device for those holders; the host
+copy is this table's private snapshot) and :meth:`swap_in` re-materializes
+them onto fresh device blocks. The bookkeeping distinguishes *swapped* from
+*freed*: ``swapped_pages`` counts host blocks in use, ``num_free`` never
+includes them, and a table is either device-resident (``blocks``) or
+host-resident (``host_blocks``) — never both. The data movement itself is the
+execution backend's job (the engine copies page payloads, the simulator
+charges PCIe time); the allocator only keeps the ledgers honest.
 """
 
 from __future__ import annotations
@@ -17,22 +30,41 @@ class OutOfBlocks(Exception):
     pass
 
 
+class OutOfHostBlocks(Exception):
+    pass
+
+
 @dataclasses.dataclass
 class BlockTable:
-    """Logical pages (in order) -> physical block ids for one sequence."""
+    """Logical pages (in order) -> physical block ids for one sequence.
+
+    While swapped out, ``blocks`` is empty and ``host_blocks`` holds the
+    host-tier page per logical page (same order); ``num_tokens`` is
+    unchanged — the tokens still exist, just not on device."""
     blocks: List[int] = dataclasses.field(default_factory=list)
     num_tokens: int = 0  # tokens actually stored
+    host_blocks: List[int] = dataclasses.field(default_factory=list)
 
     def capacity(self, block_size: int) -> int:
         return len(self.blocks) * block_size
 
+    @property
+    def on_host(self) -> bool:
+        return bool(self.host_blocks)
+
 
 class BlockAllocator:
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 host_blocks: int = 0):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.free_list: List[int] = list(range(num_blocks - 1, -1, -1))
         self.refcount: Dict[int, int] = {}
+        # host swap tier (0 = disabled): host pages are snapshots owned by
+        # exactly one table or spilled cache node, so a plain free list
+        # suffices — no refcounts, no COW
+        self.num_host_blocks = host_blocks
+        self.host_free_list: List[int] = list(range(host_blocks - 1, -1, -1))
 
     # -- raw blocks -----------------------------------------------------------
     @property
@@ -70,6 +102,74 @@ class BlockAllocator:
     def refcount_of(self, block: int) -> int:
         """Live reference count of ``block`` (0 = free / never allocated)."""
         return self.refcount.get(block, 0)
+
+    # -- host swap tier ---------------------------------------------------------
+    @property
+    def host_num_free(self) -> int:
+        return len(self.host_free_list)
+
+    @property
+    def swapped_pages(self) -> int:
+        """Host pages in use (swapped-out tables + spilled cache pages)."""
+        return self.num_host_blocks - len(self.host_free_list)
+
+    def alloc_host_block(self) -> int:
+        if not self.host_free_list:
+            raise OutOfHostBlocks
+        return self.host_free_list.pop()
+
+    def free_host_block(self, block: int) -> None:
+        if block in self.host_free_list or not \
+                (0 <= block < self.num_host_blocks):
+            raise ValueError(f"free of host block {block} that is not live "
+                             f"— double free or unknown block")
+        self.host_free_list.append(block)
+
+    def can_swap_out(self, table: BlockTable) -> bool:
+        return not table.on_host and \
+            len(table.blocks) <= len(self.host_free_list)
+
+    def swap_out(self, table: BlockTable) -> List[Tuple[int, int]]:
+        """Move ``table``'s pages device -> host. Returns ``(device, host)``
+        pairs — the execution backend must copy each device page's payload
+        into its host page BEFORE any same-iteration write can touch a
+        reallocated device block (the scheduler orders swap-out copies
+        first). Device refs are dropped (a tree-shared page survives on
+        device for its other holders; the host copy is this table's private
+        snapshot), so ``num_free`` grows by the exclusively-owned pages."""
+        if table.on_host:
+            raise ValueError("swap_out of an already-swapped table")
+        if len(table.blocks) > len(self.host_free_list):
+            raise OutOfHostBlocks
+        pairs = []
+        for dev in table.blocks:
+            host = self.alloc_host_block()
+            pairs.append((dev, host))
+            table.host_blocks.append(host)
+            self.decref(dev)
+        table.blocks.clear()
+        return pairs
+
+    def can_swap_in(self, table: BlockTable) -> bool:
+        return table.on_host and len(table.host_blocks) <= self.num_free
+
+    def swap_in(self, table: BlockTable) -> List[Tuple[int, int]]:
+        """Move ``table``'s pages host -> device onto fresh blocks. Returns
+        ``(host, device)`` pairs for the backend's copies; host pages are
+        released (their snapshot is consumed). Raises OutOfBlocks with the
+        table untouched when the device pool cannot supply every page."""
+        if not table.on_host:
+            raise ValueError("swap_in of a device-resident table")
+        if len(table.host_blocks) > self.num_free:
+            raise OutOfBlocks
+        pairs = []
+        for host in table.host_blocks:
+            dev = self.alloc_block()
+            pairs.append((host, dev))
+            table.blocks.append(dev)
+            self.free_host_block(host)
+        table.host_blocks.clear()
+        return pairs
 
     # -- sequence-level API ----------------------------------------------------
     def blocks_needed(self, table: BlockTable, new_tokens: int) -> int:
@@ -113,6 +213,12 @@ class BlockAllocator:
         for b in table.blocks:
             self.decref(b)
         table.blocks.clear()
+        # a table freed while swapped out (finished-while-swapped, or
+        # preempted-dropped) must return its host pages too, or the host
+        # tier leaks a snapshot nobody can ever reach again
+        for h in table.host_blocks:
+            self.free_host_block(h)
+        table.host_blocks.clear()
         table.num_tokens = 0
 
     # -- stats -----------------------------------------------------------------

@@ -66,6 +66,17 @@ the distkv layer, and a peer instance adopts a published path into its own
 tree with :meth:`adopt` — fresh local blocks, tree-owned, so the peer serves
 the shared system prompt without ever computing it.
 
+Spill-to-host (tiered cache). With ``spill_budget > 0`` and a host tier on
+the allocator, a cold leaf under eviction pressure *spills* to a host page
+instead of being dropped: its device page is freed (what eviction wanted)
+but the KV survives on host, the node stays in the tree with ``block = -1``
+and ``host_block`` set, and a later :meth:`match` walking onto it *restores*
+it onto a fresh device block (the ``spill_out_fn`` / ``spill_in_fn`` hooks
+move the payloads; the sim leaves them None). The host budget is bounded and
+LRU: when full, the coldest spilled page is dropped for good. Spilled nodes
+are always leaves (insert un-spills in place before growing through one),
+probe lookups still count them as hits, and hot-path publication skips them.
+
 The LRU clock is a logical counter (no wall time), keeping the simulator
 deterministic.
 """
@@ -91,12 +102,16 @@ class RadixNode:
     hit_count: int = 0  # committed admissions that reused this node
     published: bool = False  # already exported for cross-instance sharing
     pending_hot: bool = False  # queued in _recent_hits awaiting publication
+    # spill-to-host: when spilled, ``block`` is -1 and this holds the host
+    # page keeping the KV alive (-1 = device-resident)
+    host_block: int = -1
 
 
 class PrefixCache:
     def __init__(self, allocator: BlockAllocator,
                  page_size: Optional[int] = None, *,
-                 token_level: bool = True):
+                 token_level: bool = True,
+                 spill_budget: int = 0):
         self.allocator = allocator
         self.page_size = page_size or allocator.block_size
         # token-level frontier matching (SGLang-style): recover up to
@@ -119,6 +134,16 @@ class PrefixCache:
         # nodes whose hit_count moved since the last take_hot_paths drain:
         # publication scans O(recently-hit) nodes, never the whole tree
         self._recent_hits: List[RadixNode] = []
+        # spill-to-host: max host pages this cache may hold (0 = classic
+        # hard eviction), the nodes currently spilled, and the payload
+        # movers (same (dev, host)-pair-list signature as the scheduler's
+        # swap hooks; the engine wires them, the sim has no payloads)
+        self.spill_budget = spill_budget
+        self._spilled: List[RadixNode] = []
+        self.spill_out_fn = None
+        self.spill_in_fn = None
+        self.spilled_pages = 0   # cumulative spill-outs
+        self.restored_pages = 0  # cumulative spill-ins (restores)
 
     # -- lookup -----------------------------------------------------------------
     def match(self, tokens: Sequence[int], *,
@@ -145,11 +170,33 @@ class PrefixCache:
             child = node.children.get(tuple(tokens[i * ps:(i + 1) * ps]))
             if child is None:
                 break
+            if child.block == -1:
+                # spilled page: a probe counts it as a hit without touching
+                # anything; a committing match restores it onto a fresh
+                # device block (or stops the path when the device is full —
+                # the prefix restored so far is still valid)
+                if not probe and not self._restore(child):
+                    break
             if not probe:
                 child.last_access = self._clock
             path.append(child)
             node = child
         return path
+
+    def _restore(self, node: RadixNode) -> bool:
+        """Spill-in: re-materialize a spilled node onto a device block."""
+        try:
+            dev = self.allocator.alloc_block()
+        except OutOfBlocks:
+            return False
+        if self.spill_in_fn is not None:
+            self.spill_in_fn([(node.host_block, dev)])
+        self.allocator.free_host_block(node.host_block)
+        self._spilled.remove(node)
+        node.block = dev
+        node.host_block = -1
+        self.restored_pages += 1
+        return True
 
     def match_partial(self, tokens: Sequence[int],
                       path: List[RadixNode], *,
@@ -177,6 +224,8 @@ class PrefixCache:
         node = path[-1] if path else self.root
         best, best_run = None, 0
         for key, child in node.children.items():
+            if child.block == -1:
+                continue  # spilled: no device page to COW-lock
             run = 0
             stop = min(len(rest), len(key))
             while run < stop and key[run] == rest[run]:
@@ -223,6 +272,16 @@ class PrefixCache:
                 node.children[key] = child
                 self.num_pages += 1
                 new += 1
+            elif child.block == -1:
+                # un-spill in place for free: the inserter just computed
+                # this very page, so adopt its fresh device block and let
+                # the stale host copy go. Also keeps spilled nodes leaves —
+                # we never grow a branch through a host-resident page.
+                self.allocator.incref(blocks[i])
+                self.allocator.free_host_block(child.host_block)
+                self._spilled.remove(child)
+                child.block = blocks[i]
+                child.host_block = -1
             child.last_access = self._clock
             node = child
         self.inserted_pages += new
@@ -252,9 +311,14 @@ class PrefixCache:
             blocks: List[int] = []
             walk = node
             while walk.parent is not None:  # ancestors of a live node live
+                if walk.block == -1:
+                    break  # spilled since the hit: no payload to publish
                 toks[:0] = walk.key
                 blocks.insert(0, walk.block)
                 walk = walk.parent
+            if walk.parent is not None:
+                node.published = False  # republishable once restored
+                continue
             out.append((tuple(toks), blocks))
         self._recent_hits.clear()
         return out
@@ -277,6 +341,10 @@ class PrefixCache:
         for i in range(len(tokens) // ps):
             key = tuple(tokens[i * ps:(i + 1) * ps])
             child = node.children.get(key)
+            if child is not None and child.block == -1:
+                break  # adoption stops at a spilled frontier (a later
+                # match restores it; growing through it would put children
+                # under a host-resident page)
             if child is None:
                 try:
                     block = self.allocator.alloc_block()
@@ -293,12 +361,14 @@ class PrefixCache:
         return adopted
 
     # -- eviction -----------------------------------------------------------------
-    def evict(self, n_blocks: int) -> int:
+    def evict(self, n_blocks: int, *, spill: bool = True) -> int:
         """Return >= ``n_blocks`` pages to the allocator's free list by
         dropping LRU unpinned leaves. Only pages the tree *exclusively* owns
         (refcount 1) are candidates: a page some request still references is
         never freed, and dropping the tree's reference to it would destroy
-        cache without reclaiming any memory. Returns blocks actually freed."""
+        cache without reclaiming any memory. With a spill budget, a
+        candidate's KV moves to a host page instead of dying (the device
+        page is freed either way). Returns blocks actually freed."""
         freed = 0
         progress = True
         # one tree walk per pass, not per freed block; extra passes only when
@@ -308,6 +378,10 @@ class PrefixCache:
             for leaf in self._lru_leaves():
                 if freed >= n_blocks:
                     break
+                if spill and self.spill_budget and self._spill(leaf):
+                    freed += 1  # device page freed, KV kept on host
+                    progress = True
+                    continue
                 before = self.allocator.num_free
                 self.allocator.decref(leaf.block)
                 freed += self.allocator.num_free - before
@@ -317,6 +391,36 @@ class PrefixCache:
                 self.evicted_pages += 1
                 progress = True
         return freed
+
+    def _spill(self, leaf: RadixNode) -> bool:
+        """Move a cold leaf's page to the host tier (bounded LRU budget).
+        Falls back to False (hard eviction) when the host cannot take it."""
+        if len(self._spilled) >= self.spill_budget:
+            # budget full: the coldest spilled page dies so this (more
+            # recently used) one can take its host slot
+            self._drop_spilled(min(self._spilled,
+                                   key=lambda n: n.last_access))
+        if self.allocator.host_num_free == 0:
+            return False  # host pool exhausted (table swaps hold it)
+        host = self.allocator.alloc_host_block()
+        if self.spill_out_fn is not None:
+            self.spill_out_fn([(leaf.block, host)])
+        self.allocator.decref(leaf.block)  # refcount 1 -> page freed
+        leaf.host_block = host
+        leaf.block = -1
+        self._spilled.append(leaf)
+        self.spilled_pages += 1
+        return True
+
+    def _drop_spilled(self, node: RadixNode) -> None:
+        """Permanently drop a spilled node (host page freed, node unlinked).
+        Spilled nodes are always leaves — nothing dangles."""
+        self.allocator.free_host_block(node.host_block)
+        del node.parent.children[node.key]
+        node.parent = None
+        self._spilled.remove(node)
+        self.num_pages -= 1
+        self.evicted_pages += 1
 
     def _lru_leaves(self) -> List[RadixNode]:
         """Unpinned, exclusively-tree-owned leaves, oldest first."""
@@ -334,8 +438,11 @@ class PrefixCache:
         return leaves
 
     def clear(self) -> int:
-        """Drop every unpinned page (e.g. on engine reset)."""
-        return self.evict(self.num_pages)
+        """Drop every unpinned page (e.g. on engine reset), host tier
+        included — no spilling on the way out."""
+        for node in list(self._spilled):
+            self._drop_spilled(node)
+        return self.evict(self.num_pages, spill=False)
 
     # -- stats --------------------------------------------------------------------
     def record_admission(self, prompt_tokens: int, hit_tokens: int,
@@ -373,4 +480,7 @@ class PrefixCache:
             "inserted_pages": self.inserted_pages,
             "evicted_pages": self.evicted_pages,
             "adopted_pages": self.adopted_pages,
+            "spilled_pages": self.spilled_pages,
+            "restored_pages": self.restored_pages,
+            "spilled_now": len(self._spilled),
         }

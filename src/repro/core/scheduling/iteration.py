@@ -38,10 +38,17 @@ iteration rather than the sequence count.
 
 Memory is delegated to a :class:`BlockAllocator` (vLLM §III.C) or any object
 with the same interface; a request's whole prompt worth of pages is reserved
-at admission (chunk continuations never allocate), and
-preemption-by-recompute evicts the youngest request when pages run out
-(vLLM's recompute policy) — including mid-prefill victims, whose
-``prefilled_len`` resets so recompute restarts chunking from the front.
+at admission (chunk continuations never allocate). When pages run out a
+victim chosen by ``victim_policy`` (LIFO / FIFO / LRU) loses its device
+pages — by **sacrifice** (vLLM's recompute policy: pages freed, though the
+victim's computed prompt pages are first adopted into the radix tree so the
+recompute covers only the uncached suffix) or, with a host tier configured
+and ``swap_mode`` allowing it, by **swap-to-host**: the KV moves to host
+pages over PCIe, the request re-enters WAITING still holding its (now
+host-resident) table, and swap-in resumes decode or mid-prefill chunking
+exactly where it stopped — no recompute at all. ``swap_mode="auto"``
+decides per victim via ``swap_decider`` (the sim wires a PCIe-vs-recompute
+cost comparison) or a computed-token threshold.
 
 With a :class:`~repro.core.prefixcache.PrefixCache` attached, admission first
 matches the prompt against the radix tree: matched pages are locked into the
@@ -82,6 +89,19 @@ from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.request import Phase, Request
 
 CHUNK_POLICIES = ("decode_first", "prefill_first", "monolithic", "solo")
+# what happens to a preemption victim's KV:
+#   sacrifice — free the pages, recompute on re-admission (the vLLM default)
+#   swap      — move the pages to the host tier over PCIe, resume without
+#               re-prefilling (falls back to sacrifice when host is full)
+#   auto      — per-victim decision: swap when the modeled transfer undercuts
+#               the recompute (``swap_decider``), else a computed-token
+#               threshold stand-in
+SWAP_MODES = ("sacrifice", "swap", "auto")
+# who gets preempted when pages run out:
+#   lifo — youngest running request (least sunk work, the vLLM default)
+#   fifo — oldest running request
+#   lru  — least recently *scheduled* (no decode/chunk granted longest)
+VICTIM_POLICIES = ("lifo", "fifo", "lru")
 
 
 @dataclasses.dataclass
@@ -117,9 +137,21 @@ class IterationPlan:
     # ALL prefill work this iteration (including the final chunks mirrored
     # in ``prefill``): the execution backends run these in order
     chunks: List[PrefillChunk] = dataclasses.field(default_factory=list)
+    # host-tier transfers this iteration, as (request, page-pair list):
+    # swap_out pairs are (device, host), swap_in pairs are (host, device).
+    # The page payloads were already moved by the scheduler's swap hooks
+    # (engine) — these lists exist for backends to charge transfer time
+    # (sim PCIe lane) and manage per-request state (engine decode slots).
+    swap_out: List[Tuple[Request, List[Tuple[int, int]]]] = \
+        dataclasses.field(default_factory=list)
+    swap_in: List[Tuple[Request, List[Tuple[int, int]]]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
+        """No *compute* this iteration. Swap-only iterations are still
+        "empty" — backends must process ``swap_out``/``swap_in`` (and
+        ``preempted``) before early-returning on this."""
         return not (self.chunks or self.prefill or self.decode)
 
     def token_count(self) -> int:
@@ -143,10 +175,21 @@ class IterationScheduler:
                      Callable[[Sequence[int], int], int]] = None,
                  remote_adopter: Optional[
                      Callable[[Request, int], Optional[object]]] = None,
-                 prefill_only: bool = False):
+                 prefill_only: bool = False,
+                 swap_mode: str = "sacrifice",
+                 victim_policy: str = "lifo",
+                 swap_decider: Optional[
+                     Callable[[Request, int], bool]] = None,
+                 swap_min_tokens: Optional[int] = None):
         if chunk_policy not in CHUNK_POLICIES:
             raise ValueError(f"chunk_policy must be one of {CHUNK_POLICIES}, "
                              f"got {chunk_policy!r}")
+        if swap_mode not in SWAP_MODES:
+            raise ValueError(f"swap_mode must be one of {SWAP_MODES}, "
+                             f"got {swap_mode!r}")
+        if victim_policy not in VICTIM_POLICIES:
+            raise ValueError(f"victim_policy must be one of "
+                             f"{VICTIM_POLICIES}, got {victim_policy!r}")
         self.allocator = allocator
         self.max_running = max_running
         self.max_tokens = max_tokens_per_iter
@@ -187,6 +230,34 @@ class IterationScheduler:
         # (Phase.INCREMENT) until a KVHandoff coordinator moves its KV to a
         # decode instance via release_request()/install_running()
         self.prefill_only = prefill_only
+        # swap-to-host preemption (see SWAP_MODES / VICTIM_POLICIES above).
+        # ``swap_decider(req, n_pages) -> bool`` resolves "auto" per victim
+        # (the sim wires a PCIe-vs-recompute cost comparison); without one,
+        # auto swaps once the victim's computed context reaches
+        # ``swap_min_tokens`` (default: 8 pages' worth — below that the
+        # recompute is cheaper than the round trip).
+        self.swap_mode = swap_mode
+        self.victim_policy = victim_policy
+        self.swap_decider = swap_decider
+        self.swap_min_tokens = swap_min_tokens if swap_min_tokens is not None \
+            else 8 * allocator.block_size
+        # data-movement hooks wired by the engine (None in the sim): called
+        # synchronously with the allocator's page pairs, swap_out_hook BEFORE
+        # any later work this schedule() could reallocate-and-write the freed
+        # device pages, swap_in_hook right after fresh device pages are
+        # allocated (nothing reads them until the backend's next compute)
+        self.swap_out_hook: Optional[
+            Callable[[List[Tuple[int, int]]], None]] = None
+        self.swap_in_hook: Optional[
+            Callable[[List[Tuple[int, int]]], None]] = None
+        # KVHandoff fallback (disaggregated serving): request ids a
+        # prefill-only instance IS allowed to decode — requests whose
+        # handoff deferral cap expired decode here, mixed-style, instead of
+        # starving behind busy decode instances
+        self.decode_exempt: set = set()
+        # monotonically increasing schedule() call index — stamps
+        # Request.last_planned_iter, the "lru" victim policy's recency key
+        self._iter_idx = 0
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.tables: Dict[int, BlockTable] = {}
@@ -239,9 +310,11 @@ class IterationScheduler:
             # sampled token was never fed back, so its page may be partial.
             # A leased request's local pages cover only its suffix (the
             # leading positions live on the creditor), so there is no valid
-            # root path to insert.
+            # root path to insert. A host-resident (swapped-out) table has
+            # no device pages to adopt — finished-while-swapped just frees.
             if self.prefix_cache is not None and self.cache_generated \
-                    and len(req.prompt) == req.prompt_len and lease is None:
+                    and len(req.prompt) == req.prompt_len and lease is None \
+                    and not table.on_host:
                 toks = (req.prompt + req.output)[:table.num_tokens]
                 self.prefix_cache.insert(toks, table.blocks)
             # the tree's increfs keep adopted pages alive past free_table
@@ -249,6 +322,9 @@ class IterationScheduler:
             self.allocator.free_table(self.tables.pop(req.request_id))
         if req in self.running:
             self.running.remove(req)
+        if req in self.waiting:  # finished-while-swapped / external cancel
+            self.waiting.remove(req)
+        self.decode_exempt.discard(req.request_id)
 
     def _release_cache_path(self, req: Request) -> None:
         path = self._cache_paths.pop(req.request_id, None)
@@ -277,6 +353,7 @@ class IterationScheduler:
         plan = IterationPlan(prefill=[], decode=[], preempted=[], cow=[],
                              chunks=[])
         self._budget = self.max_tokens
+        self._iter_idx += 1
         if self.chunk_policy == "prefill_first":
             # decode-page reserve: admissions run BEFORE the decode planner
             # here, so without a reserve an admission can take the very page
@@ -317,6 +394,11 @@ class IterationScheduler:
         for c in [c for c in plan.chunks if c.req is victim]:
             plan.chunks.remove(c)
             self._budget += c.length
+            # roll back the progress the planner credited for this chunk:
+            # its KV will never be computed, so leaving prefilled_len past
+            # c.start would let a swap preserve — or the preemption path
+            # cache-insert — pages holding garbage
+            victim.prefilled_len = min(victim.prefilled_len, c.start)
             if tr is not None:
                 tr.instant("req", "chunk_rescind", rid=victim.request_id,
                            start=c.start, length=c.length)
@@ -338,7 +420,7 @@ class IterationScheduler:
     def _plan_decodes(self, plan: IterationPlan) -> None:
         """Advance every running decode by one token (latency priority
         within its budget slice), preempting under page pressure."""
-        if self.prefill_only:
+        if self.prefill_only and not self.decode_exempt:
             return  # disaggregated prefill role: decode happens elsewhere
         # under prefill_first this runs AFTER the chunk planners: a request
         # whose final chunk is planned this very iteration must not also be
@@ -349,8 +431,13 @@ class IterationScheduler:
         for req in list(self.running):
             if self._budget <= 0:
                 break
+            if self.prefill_only and \
+                    req.request_id not in self.decode_exempt:
+                continue  # only handoff-fallback requests decode here
             if req.request_id not in self.tables:
                 continue  # became a preemption victim earlier this iteration
+            if req not in self.running:
+                continue  # swapped out earlier this very loop
             if req.prefilled_len < req.prompt_len or \
                     req.request_id in chunked_now:
                 continue  # still prefilling / final chunk runs this iter
@@ -360,9 +447,9 @@ class IterationScheduler:
                 # reclaim unreferenced cached pages before preempting anyone
                 self.prefix_cache.evict(self.allocator.blocks_needed(table, 1))
             if not self.allocator.can_append(table, 1):
-                # _preempt_youngest rescinds the victim's already-planned
-                # work for this iteration before freeing its table
-                victim = self._preempt_youngest(exclude=req, plan=plan)
+                # _evict_one rescinds the victim's already-planned work for
+                # this iteration, then swaps or sacrifices its pages
+                victim = self._evict_one(exclude=req, plan=plan)
                 if victim is not None and self.prefix_cache is not None \
                         and not self.allocator.can_append(table, 1):
                     # the victim's prompt pages may survive only as
@@ -371,25 +458,16 @@ class IterationScheduler:
                     self.prefix_cache.evict(
                         self.allocator.blocks_needed(table, 1))
                 if victim is None or not self.allocator.can_append(table, 1):
-                    # preempt this request itself (rescind any of its own
-                    # planned work too — its block table is gone)
+                    # evict this request itself (rescind any of its own
+                    # planned work too — its device pages are going away)
                     self._rescind(plan, req)
-                    self._preempt(req)
-                    plan.preempted.append(req)
-                    if self.trace is not None:
-                        self.trace.instant("sched", "preempt",
-                                           rid=req.request_id,
-                                           trigger=req.request_id,
-                                           kind="self")
+                    self._preempt_or_swap(req, plan,
+                                          trigger=req.request_id,
+                                          kind="self")
                     continue
-                plan.preempted.append(victim)
-                if self.trace is not None:
-                    self.trace.instant("sched", "preempt",
-                                       rid=victim.request_id,
-                                       trigger=req.request_id,
-                                       kind="victim")
             plan.cow.extend(self.allocator.append_tokens(table, 1))
             plan.decode.append(req)
+            req.last_planned_iter = self._iter_idx
             self._budget -= 1
 
     def _plan_continuations(self, plan: IterationPlan) -> None:
@@ -415,6 +493,7 @@ class IterationScheduler:
                            start=req.prefilled_len, length=n,
                            last=req.prefilled_len + n == req.prompt_len)
             req.prefilled_len += n
+            req.last_planned_iter = self._iter_idx
             if req.prefilled_len == req.prompt_len:
                 plan.prefill.append(req)
             self._budget -= n
@@ -426,6 +505,14 @@ class IterationScheduler:
         while (self.waiting and self._budget > 0
                and len(self.running) < self.max_running):
             req = self.waiting[0]
+            swapped = self.tables.get(req.request_id)
+            if swapped is not None and swapped.on_host:
+                # a swapped-out victim waits at the front of the queue
+                # (FCFS, same as a sacrificed victim): it resumes — not
+                # re-prefills — once the device can hold its pages again
+                if not self._plan_swap_in(req, swapped, plan):
+                    break  # head-of-line: device still too full
+                continue
             path: list = []
             partial = None
             lease = None
@@ -565,9 +652,82 @@ class IterationScheduler:
                            length=first_chunk,
                            last=cached + first_chunk == req.prompt_len)
             req.prefilled_len = cached + first_chunk
+            req.last_planned_iter = self._iter_idx
             if req.prefilled_len == req.prompt_len:
                 plan.prefill.append(req)
             self._budget -= first_chunk
+
+    def _plan_swap_in(self, req: Request, table: BlockTable,
+                      plan: IterationPlan) -> bool:
+        """Try to re-materialize a swapped-out request's pages on device.
+        Returns True when the queue head was consumed (swapped in, or its
+        snapshot abandoned), False to head-of-line-block this iteration."""
+        bs = self.allocator.block_size
+        # the pages to restore, plus the growth block the next decode
+        # append may need (checked against supply, not allocated)
+        growth = max(0, -(-(table.num_tokens + 1) // bs)
+                     - len(table.host_blocks))
+        need = len(table.host_blocks) + growth
+        avail = self.allocator.num_free - self.watermark_blocks - \
+            self._decode_reserve
+        if need > avail and self.prefix_cache is not None:
+            self.prefix_cache.evict(need - avail)
+            avail = self.allocator.num_free - self.watermark_blocks - \
+                self._decode_reserve
+        if need > avail:
+            if need > self.allocator.num_blocks - self.watermark_blocks:
+                # this context can NEVER fit on device again (it filled the
+                # pool and still needs to grow): the snapshot is useless —
+                # degrade to sacrifice so re-admission (and the
+                # max_preemptions drop budget) takes over
+                self._abandon_swap(req, table, plan)
+                return True
+            if self.trace is not None:
+                self.trace.instant("sched", "refuse", rid=req.request_id,
+                                   why="swap_wait", needed=need, avail=avail)
+            return False
+        pairs = self.allocator.swap_in(table)
+        if self.swap_in_hook is not None:
+            # engine copies host->device; nothing reads the fresh blocks
+            # before its next compute, but copying now keeps the hook
+            # symmetric with swap_out and the pages immediately coherent
+            self.swap_in_hook(pairs)
+        self.waiting.pop(0)
+        # resume EXACTLY where the swap interrupted: a fully-prefilled
+        # request re-enters decode (no chunks — the acceptance criterion),
+        # a mid-prefill victim continues chunking from its preserved
+        # prefilled_len via _plan_continuations
+        req.phase = Phase.INCREMENT if req.prefilled_len >= req.prompt_len \
+            else Phase.INITIATION
+        req.last_planned_iter = self._iter_idx
+        self.running.append(req)
+        plan.swap_in.append((req, pairs))
+        if self.trace is not None:
+            self.trace.instant("sched", "swap_in", rid=req.request_id,
+                               pages=len(pairs),
+                               prefilled=req.prefilled_len,
+                               generated=req.n_generated)
+        return True
+
+    def _abandon_swap(self, req: Request, table: BlockTable,
+                      plan: IterationPlan) -> None:
+        """Drop a host snapshot that can never be swapped back in and reset
+        the request to recompute-from-scratch semantics (same bookkeeping
+        as :meth:`_preempt`, but the request is already in ``waiting``)."""
+        req.phase = Phase.PREEMPTED
+        req.preemptions += 1
+        req.prompt = (req.prompt + req.output) if req.prompt else req.prompt
+        req.prompt_len = req.context_len
+        req.max_new_tokens -= req.n_generated
+        req.committed_output.extend(req.output)
+        req.output = []
+        req.num_cached_tokens = 0
+        req.prefilled_len = 0
+        self.allocator.free_table(self.tables.pop(req.request_id))
+        plan.preempted.append(req)  # the drop budget applies
+        if self.trace is not None:
+            self.trace.instant("sched", "preempt", rid=req.request_id,
+                               trigger=req.request_id, kind="swap_abandon")
 
     def complete_iteration(self, plan: IterationPlan, now: float) -> List[Request]:
         """Mark phases + retire finished requests. Returns finished list."""
@@ -625,6 +785,7 @@ class IterationScheduler:
             self.allocator.free_table(table)
         if req in self.running:
             self.running.remove(req)
+        self.decode_exempt.discard(req.request_id)
 
     def install_running(self, req: Request, table: BlockTable,
                         lease: Optional[object] = None) -> None:
@@ -675,6 +836,23 @@ class IterationScheduler:
     def _preempt(self, req: Request) -> None:
         req.phase = Phase.PREEMPTED
         req.preemptions += 1
+        # keep the victim's prefix-cache credit: its prefilled prompt pages
+        # hold REAL computed KV, so adopt the full ones into the radix tree
+        # BEFORE the table is freed. Re-admission then re-probes the tree
+        # and the recompute covers only the uncached suffix — previously a
+        # mid-prefill victim restarted chunking from token 0 even though
+        # its completed chunks' pages were still sitting in memory.
+        # (Decode-phase victims' prompt pages were already inserted at
+        # prefill completion; insert() dedups.) Leased requests are
+        # excluded — their leading pages live on the creditor — and so are
+        # sim requests with immaterial prompts.
+        if self.prefix_cache is not None and req.prefilled_len > 0 \
+                and req.request_id not in self.leases \
+                and len(req.prompt) == req.prompt_len:
+            table = self.tables.get(req.request_id)
+            if table is not None and not table.on_host:
+                n = min(req.prefilled_len, table.num_tokens)
+                self.prefix_cache.insert(req.prompt[:n], table.blocks)
         # recompute policy: drop pages; generated tokens move into the prompt
         req.prompt = (req.prompt + req.output) if req.prompt else req.prompt
         req.prompt_len = req.context_len
@@ -697,13 +875,79 @@ class IterationScheduler:
             self.running.remove(req)
         self.waiting.insert(0, req)
 
-    def _preempt_youngest(self, exclude: Request,
-                          plan: Optional[IterationPlan] = None
-                          ) -> Optional[Request]:
-        for req in reversed(self.running):
-            if req is not exclude:
-                if plan is not None:
-                    self._rescind(plan, req)
-                self._preempt(req)
-                return req
-        return None
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        """Choose who loses their device pages, per ``victim_policy``."""
+        cands = [r for r in self.running
+                 if r is not exclude and r.request_id in self.tables]
+        if not cands:
+            return None
+        if self.victim_policy == "fifo":
+            return cands[0]
+        if self.victim_policy == "lru":
+            return min(cands, key=lambda r: r.last_planned_iter)
+        return cands[-1]  # lifo: youngest, least sunk work (vLLM default)
+
+    def _evict_one(self, exclude: Request,
+                   plan: IterationPlan) -> Optional[Request]:
+        """Pick a victim, rescind its planned work, and take its device
+        pages — by swap when the mode/decider says the KV is worth the PCIe
+        round trip, by sacrifice (recompute) otherwise."""
+        victim = self._pick_victim(exclude)
+        if victim is None:
+            return None
+        self._rescind(plan, victim)
+        self._preempt_or_swap(victim, plan, trigger=exclude.request_id,
+                              kind="victim")
+        return victim
+
+    def _should_swap(self, req: Request) -> bool:
+        if self.swap_mode == "sacrifice" or \
+                self.allocator.num_host_blocks == 0:
+            return False
+        if req.request_id in self.leases:
+            # a leased prefix lives on the creditor — the local pages are
+            # only the suffix, and the lease must be repaid now, so a host
+            # snapshot could not be resumed coherently. Sacrifice.
+            return False
+        table = self.tables.get(req.request_id)
+        if table is None or not self.allocator.can_swap_out(table):
+            return False  # host tier full: degrade to sacrifice
+        if self.swap_mode == "swap":
+            return True
+        computed = min(req.prefilled_len, table.num_tokens) + req.n_generated
+        if self.swap_decider is not None:
+            return self.swap_decider(req, len(table.blocks))
+        return computed >= self.swap_min_tokens
+
+    def _preempt_or_swap(self, req: Request, plan: IterationPlan, *,
+                         trigger: int, kind: str) -> None:
+        """Evict ``req``'s device pages. Swap: the KV moves to host pages
+        and the request re-enters WAITING still holding its table (and its
+        prefill/decode progress) — swap-in resumes exactly where it
+        stopped, no recompute. Sacrifice: classic preempt-by-recompute."""
+        tr = self.trace
+        if self._should_swap(req):
+            table = self.tables[req.request_id]
+            # the locked radix path's pages stay device-resident for the
+            # tree (swap_out only drops THIS table's refs); release the
+            # pins so they become evictable while we are away
+            self._release_cache_path(req)
+            pairs = self.allocator.swap_out(table)
+            if self.swap_out_hook is not None:
+                # engine copies device->host NOW, before anything later in
+                # this schedule() can reallocate-and-write the freed pages
+                self.swap_out_hook(pairs)
+            req.swaps += 1
+            req.phase = Phase.WAITING
+            self.running.remove(req)
+            self.waiting.insert(0, req)
+            plan.swap_out.append((req, pairs))
+            if tr is not None:
+                tr.instant("sched", "swap_out", rid=req.request_id,
+                           pages=len(pairs), trigger=trigger, kind=kind)
+        else:
+            self._preempt(req)
+            plan.preempted.append(req)
+            if tr is not None:
+                tr.instant("sched", "preempt", rid=req.request_id,
+                           trigger=trigger, kind=kind)

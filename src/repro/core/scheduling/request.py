@@ -54,6 +54,13 @@ class Request:
     # one of serving.api.FINISH_REASONS once finished
     finish_reason: Optional[str] = None
     preemptions: int = 0
+    # swap-to-host preemptions (KV preserved on host, no recompute) — a
+    # separate counter from ``preemptions`` because a swap loses no work and
+    # must not eat into the max_preemptions drop budget
+    swaps: int = 0
+    # scheduler iteration index this request last received work in (decode
+    # grant or prefill chunk) — the LRU victim policy's recency key
+    last_planned_iter: int = -1
     # sum of log p(sampled token) under the model — best-of-n ranking
     cumulative_logprob: float = 0.0
     # prompt tokens served from the radix prefix cache at the current

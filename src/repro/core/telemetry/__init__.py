@@ -8,6 +8,7 @@ from .export import (
     export_metrics_csv,
     export_metrics_json,
     to_chrome_trace,
+    validate_swap_balance,
     validate_trace_events,
 )
 
@@ -22,5 +23,6 @@ __all__ = [
     "export_metrics_csv",
     "export_metrics_json",
     "to_chrome_trace",
+    "validate_swap_balance",
     "validate_trace_events",
 ]

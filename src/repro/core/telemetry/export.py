@@ -179,3 +179,52 @@ def validate_trace_events(obj: object) -> List[str]:
         if n != 0:
             errors.append(f"unclosed async span {key} (depth {n})")
     return errors
+
+
+def validate_swap_balance(obj: object) -> List[str]:
+    """Check the host-swap invariant on an exported trace.
+
+    Per request, ``sched.swap_out`` / ``sched.swap_in`` instants must
+    alternate starting with an out: at any point in time a request is
+    either device-resident (balance 0) or host-resident (balance 1).
+    A trailing unmatched ``swap_out`` is legal — the request finished or
+    was abandoned while swapped — so the final balance per rid may be 0
+    or 1, never more. Returns human-readable problems (empty ⇒ valid).
+    """
+    if isinstance(obj, dict):
+        events = obj.get("traceEvents", [])
+    elif isinstance(obj, list):
+        events = obj
+    else:
+        return ["trace must be a JSON object with 'traceEvents' or a list"]
+    swaps = []
+    for e in events:
+        if not isinstance(e, dict) or e.get("cat") != "sched":
+            continue
+        name = e.get("name")
+        if name not in ("swap_out", "swap_in"):
+            continue
+        args = e.get("args") or {}
+        swaps.append((e.get("ts", 0.0), args.get("rid"), name))
+    errors: List[str] = []
+    balance: Dict[object, int] = {}
+    for ts, rid, name in sorted(swaps, key=lambda s: s[0]):
+        if rid is None:
+            errors.append(f"sched.{name} at ts={ts} lacks a rid")
+            continue
+        b = balance.get(rid, 0)
+        if name == "swap_out":
+            if b != 0:
+                errors.append(f"rid {rid}: swap_out at ts={ts} while "
+                              f"already swapped out (balance {b})")
+            balance[rid] = b + 1
+        else:
+            if b != 1:
+                errors.append(f"rid {rid}: swap_in at ts={ts} without a "
+                              f"prior swap_out (balance {b})")
+            balance[rid] = b - 1
+    for rid, b in sorted(balance.items(), key=lambda kv: str(kv[0])):
+        if b not in (0, 1):
+            errors.append(f"rid {rid}: final swap balance {b} "
+                          f"(must be 0 or 1)")
+    return errors

@@ -43,6 +43,10 @@ def build_instance(args):
                           max_running=args.slots,
                           prefix_cache=args.prefix_cache,
                           chunk_policy=args.chunk_policy,
+                          host_blocks=args.host_pages,
+                          swap_mode=args.swap_mode,
+                          victim_policy=args.victim_policy,
+                          cache_spill_pages=args.cache_spill_pages,
                           net=build_netmodel(args), trace=telemetry)
     import jax
     from repro.models import Model
@@ -54,7 +58,10 @@ def build_instance(args):
         num_pages=args.pages, page_size=args.page_size,
         max_slots=args.slots, use_kernel=args.use_kernel,
         enable_prefix_cache=args.prefix_cache,
-        chunk_policy=args.chunk_policy, enable_telemetry=telemetry))
+        chunk_policy=args.chunk_policy, enable_telemetry=telemetry,
+        host_pages=args.host_pages, swap_mode=args.swap_mode,
+        victim_policy=args.victim_policy,
+        cache_spill_pages=args.cache_spill_pages))
 
 
 def parse_roles_arg(args):
@@ -133,6 +140,26 @@ def main():
                          "optimal), monolithic (whole prompt in one "
                          "iteration next to the decodes), or solo (legacy: "
                          "over-budget prompts wait for an idle engine)")
+    from repro.core.scheduling.iteration import SWAP_MODES, VICTIM_POLICIES
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host (CPU) KV pages backing swap-to-host "
+                         "preemption and prefix-cache spill (0 = no host "
+                         "tier, preemption always recomputes)")
+    ap.add_argument("--swap-mode", default="sacrifice", choices=SWAP_MODES,
+                    help="what preemption does to a victim's computed KV: "
+                         "sacrifice (free + re-prefill later), swap (move "
+                         "to host pages over PCIe, resume without "
+                         "re-prefill), or auto (per-victim cost decision)")
+    ap.add_argument("--victim-policy", default="lifo",
+                    choices=VICTIM_POLICIES,
+                    help="which running request is preempted/swapped under "
+                         "memory pressure: lifo (newest), fifo (oldest), "
+                         "or lru (least recently scheduled)")
+    ap.add_argument("--cache-spill-pages", type=int, default=0,
+                    help="host pages the prefix cache may use to spill "
+                         "cold cached prefixes instead of evicting them "
+                         "(bounded LRU; needs --host-pages and "
+                         "--prefix-cache)")
     ap.add_argument("--instances", type=int, default=1,
                     help="serving instances behind the cluster router "
                          "(1 = no router)")
@@ -226,6 +253,13 @@ def main():
               f"(chunk policy: {args.chunk_policy})")
     if stats.prefix_hit_rate is not None:
         print(f"prefix-cache hit-rate {stats.prefix_hit_rate:.1%}")
+    kids = getattr(backend, "children", [backend])
+    n_so = sum(getattr(c, "swapped_out", 0) for c in kids)
+    n_si = sum(getattr(c, "swapped_in", 0) for c in kids)
+    if n_so or n_si:
+        print(f"host swap: {n_so} swap-outs, {n_si} swap-ins "
+              f"(mode: {args.swap_mode}, victims: {args.victim_policy}, "
+              f"{args.host_pages} host pages)")
     if getattr(backend, "pages_borrowed", 0):
         print(f"zero-copy: {backend.leases_granted} leases, "
               f"{backend.pages_borrowed} pages served remotely "
@@ -235,7 +269,8 @@ def main():
         print(f"disagg: {ho.handoffs_migrated} migrated + "
               f"{ho.handoffs_leased} leased KV handoffs "
               f"({ho.pages_copied} pages copied, {ho.pages_leased} leased, "
-              f"{ho.deferrals} deferrals; mode: {args.handoff_mode})")
+              f"{ho.deferrals} deferrals, {ho.fallbacks} fallbacks; "
+              f"mode: {args.handoff_mode})")
     if stats.per_instance:
         for i, row in sorted(stats.per_instance.items()):
             extra = ""

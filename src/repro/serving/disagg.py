@@ -149,21 +149,37 @@ class KVHandoff:
     (a fully-parked prefill instance makes no progress of its own, so the
     handoff cannot ride on an after-step hook). A request with no viable
     decode target stays parked on its prefill host and is retried next
-    step — ``deferrals`` counts those waits."""
+    step — ``deferrals`` counts those waits.
+
+    Deferral is not allowed to become starvation: a request deferred more
+    than ``defer_cap`` consecutive times falls back to decoding on its
+    prefill host, mixed-style. The rid is added to that scheduler's
+    ``decode_exempt`` set (a ``prefill_only`` scheduler plans decodes for
+    exempt rids only), so the request finishes locally instead of waiting
+    forever on decode capacity that may never appear — its KV is already
+    resident there, so fallback costs nothing but the prefill host's
+    iteration time. Each wait emits a ``handoff.deferred`` instant and the
+    cap trip a ``handoff.fallback`` instant on the router track."""
 
     def __init__(self, router, *, mode: str = "auto",
-                 placement: Optional[DecodePlacement] = None):
+                 placement: Optional[DecodePlacement] = None,
+                 defer_cap: int = 8):
         if mode not in HANDOFF_MODES:
             raise ValueError(f"handoff_mode must be one of {HANDOFF_MODES}, "
                              f"got {mode!r}")
+        if defer_cap < 1:
+            raise ValueError(f"defer_cap must be >= 1, got {defer_cap}")
         self.router = router
         self.mode = mode
         self.placement = placement or DecodePlacement()
+        self.defer_cap = defer_cap
         self.handoffs_migrated = 0
         self.handoffs_leased = 0
         self.pages_copied = 0
         self.pages_leased = 0
         self.deferrals = 0
+        self.fallbacks = 0
+        self._defers: dict = {}  # rid -> consecutive failed handoff tries
 
     @property
     def handoffs(self) -> int:
@@ -178,15 +194,38 @@ class KVHandoff:
             sched = r.children[p_idx].scheduler
             ready = [req for req in list(sched.running)
                      if req.phase == Phase.INCREMENT
-                     and req.prefilled_len >= req.prompt_len]
+                     and req.prefilled_len >= req.prompt_len
+                     and req.request_id not in sched.decode_exempt]
             for req in ready:
                 if self._handoff(p_idx, req):
+                    self._defers.pop(req.request_id, None)
                     moved += 1
                 else:
-                    self.deferrals += 1
+                    self._defer(p_idx, req)
         if moved:
             r._heartbeat_all()
         return moved
+
+    def _defer(self, p_idx: int, req: Request) -> None:
+        """One more failed handoff try; trip the fallback at the cap."""
+        self.deferrals += 1
+        rid = req.request_id
+        n = self._defers.get(rid, 0) + 1
+        self._defers[rid] = n
+        r = self.router
+        ts = r.children[p_idx].clock()
+        tr = r.trace
+        if tr is not None:
+            tr.instant("handoff", "deferred", rid=rid, ts=ts, src=p_idx,
+                       tries=n)
+        if n >= self.defer_cap:
+            # starvation guard: decode where the KV already lives
+            r.children[p_idx].scheduler.decode_exempt.add(rid)
+            self._defers.pop(rid, None)
+            self.fallbacks += 1
+            if tr is not None:
+                tr.instant("handoff", "fallback", rid=rid, ts=ts, src=p_idx,
+                           tries=n)
 
     # -- one handoff ------------------------------------------------------------
 

@@ -116,6 +116,19 @@ class EngineConfig:
     # whole prompt prefills in one iteration alongside the decodes), or
     # "solo" (legacy: over-budget prompts wait for an idle engine)
     chunk_policy: str = "decode_first"
+    # host swap tier: host-memory pages a preemption victim's KV can move
+    # to (0 = disabled, classic sacrifice-and-recompute). With pages
+    # available, swap_mode ("sacrifice" | "swap" | "auto") and
+    # victim_policy ("lifo" | "fifo" | "lru") pick who loses device pages
+    # and whether their KV survives on host — see
+    # core.scheduling.iteration.SWAP_MODES / VICTIM_POLICIES
+    host_pages: int = 0
+    swap_mode: str = "sacrifice"
+    victim_policy: str = "lifo"
+    # prefix-cache spill: cold radix pages move to host pages (bounded LRU
+    # budget, drawn from the same host_pages pool) instead of dying — a
+    # later match restores them over PCIe instead of recomputing
+    cache_spill_pages: int = 0
     # structured event tracing + per-iteration metric timelines
     # (repro.core.telemetry) on this engine's wall clock. Off by default —
     # the disabled path constructs no event objects at all.
@@ -139,15 +152,37 @@ class PagedEngine:
         self.k_pages = jnp.zeros((L, P + 1, ps, cfg.num_kv_heads,
                                   cfg.head_dim), cfg.param_dtype)
         self.v_pages = jnp.zeros_like(self.k_pages)
-        self.allocator = BlockAllocator(P, ps)
-        self.prefix_cache = PrefixCache(self.allocator) \
+        self.allocator = BlockAllocator(P, ps,
+                                        host_blocks=ecfg.host_pages)
+        self.prefix_cache = PrefixCache(
+            self.allocator, spill_budget=ecfg.cache_spill_pages) \
             if ecfg.enable_prefix_cache else None
         self.scheduler = IterationScheduler(
             self.allocator, max_running=ecfg.max_slots,
             max_tokens_per_iter=ecfg.max_tokens_per_iter,
             prefix_cache=self.prefix_cache,
             max_preemptions=ecfg.max_preemptions,
-            chunk_policy=ecfg.chunk_policy)
+            chunk_policy=ecfg.chunk_policy,
+            swap_mode=ecfg.swap_mode, victim_policy=ecfg.victim_policy)
+        # host swap tier: pinned-host-memory stand-ins (numpy arrays, same
+        # page geometry as the device pools minus the trash page). The
+        # scheduler's swap hooks move payloads synchronously at schedule
+        # time — swap-out MUST copy before anything later in the same
+        # schedule() can reallocate-and-write the freed device pages
+        if ecfg.host_pages:
+            H = ecfg.host_pages
+            self.h_k_pages = np.zeros((L, H, ps, cfg.num_kv_heads,
+                                       cfg.head_dim), self.k_pages.dtype)
+            self.h_v_pages = np.zeros_like(self.h_k_pages)
+            self.scheduler.swap_out_hook = self._swap_out_copy
+            self.scheduler.swap_in_hook = self._swap_in_copy
+            if self.prefix_cache is not None:
+                self.prefix_cache.spill_out_fn = self._spill_out_copy
+                self.prefix_cache.spill_in_fn = self._spill_in_copy
+        else:
+            self.h_k_pages = self.h_v_pages = None
+        self.swapped_out = 0
+        self.swapped_in = 0
         # block-table width: the real per-sequence context limit, not the
         # whole page supply — shrinks the (n, max_pages) host->device
         # transfer every decode step
@@ -576,6 +611,19 @@ class PagedEngine:
         for req in plan.preempted:
             if req.request_id in self.slots:
                 self.free_slots.append(self.slots.pop(req.request_id))
+        # swap transfers already ran via the scheduler hooks; here only the
+        # decode slots move: a swapped-out request gives its slot up, a
+        # swapped-in one claims a fresh slot and re-arms its input token
+        # (the last sampled token, whose KV was never written — it resumes
+        # decode exactly where the swap interrupted it)
+        for req, _pairs in plan.swap_out:
+            if req.request_id in self.slots:
+                self.free_slots.append(self.slots.pop(req.request_id))
+        for req, _pairs in plan.swap_in:
+            slot = self.free_slots.pop()
+            self.slots[req.request_id] = slot
+            if req.output:
+                self.last_token[slot] = req.output[-1]
         if plan.empty:
             # a self-preempted request can leave an otherwise-empty plan:
             # run completion anyway so the max_preemptions drop policy
@@ -704,12 +752,16 @@ class PagedEngine:
             m.gauge("running", len(self.scheduler.running))
             m.gauge("waiting", len(self.scheduler.waiting))
             m.gauge("net_time_s", self.net_time)
+            if self.allocator.num_host_blocks:
+                m.gauge("swapped_pages", self.allocator.swapped_pages)
             if self.prefix_cache is not None:
                 m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
             m.count("tokens", plan.token_count())
             m.count("decode_tokens", len(plan.decode))
             m.count("prefill_tokens", sum(c.length for c in plan.chunks))
             m.count("preemptions", len(plan.preempted))
+            m.count("swap_outs", len(plan.swap_out))
+            m.count("swap_ins", len(plan.swap_in))
             m.observe("iteration_time_s", dur)
             m.snapshot(now, self.iterations)
         self.iterations += 1
@@ -740,6 +792,44 @@ class PagedEngine:
                 # prefix cache on it still reuses the parent's prompt pages)
                 self.scheduler.add_request(child)
         return forked
+
+    # -- host swap tier -----------------------------------------------------------
+
+    def _swap_out_copy(self, pairs) -> None:
+        """Device -> host page payloads for one table's swap-out (scheduler
+        hook, called before the freed device pages can be reallocated)."""
+        devs = jnp.asarray([d for d, _ in pairs], jnp.int32)
+        hosts = [h for _, h in pairs]
+        self.h_k_pages[:, hosts] = np.asarray(self.k_pages[:, devs])
+        self.h_v_pages[:, hosts] = np.asarray(self.v_pages[:, devs])
+        self.swapped_out += 1
+
+    def _swap_in_copy(self, pairs) -> None:
+        """Host -> device onto the freshly allocated blocks (batched: one
+        pool update per direction, same idiom as the COW copy in step)."""
+        hosts = [h for h, _ in pairs]
+        devs = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.k_pages = self.k_pages.at[:, devs].set(
+            jnp.asarray(self.h_k_pages[:, hosts]))
+        self.v_pages = self.v_pages.at[:, devs].set(
+            jnp.asarray(self.h_v_pages[:, hosts]))
+        self.swapped_in += 1
+
+    def _spill_out_copy(self, pairs) -> None:
+        """Prefix-cache spill movers: same transfers as a table swap, kept
+        out of the swapped_out/in event counters."""
+        devs = jnp.asarray([d for d, _ in pairs], jnp.int32)
+        hosts = [h for _, h in pairs]
+        self.h_k_pages[:, hosts] = np.asarray(self.k_pages[:, devs])
+        self.h_v_pages[:, hosts] = np.asarray(self.v_pages[:, devs])
+
+    def _spill_in_copy(self, pairs) -> None:
+        hosts = [h for h, _ in pairs]
+        devs = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.k_pages = self.k_pages.at[:, devs].set(
+            jnp.asarray(self.h_k_pages[:, hosts]))
+        self.v_pages = self.v_pages.at[:, devs].set(
+            jnp.asarray(self.h_v_pages[:, hosts]))
 
     # -- cross-instance prefix sharing -------------------------------------------
 

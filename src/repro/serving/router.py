@@ -209,6 +209,7 @@ class RouterBackend:
                  gmanager: Optional[GManager] = None,
                  roles: Optional[Union[str, Sequence[str]]] = None,
                  handoff_mode: str = "auto",
+                 handoff_defer_cap: int = 8,
                  promote_after: Optional[int] = None):
         if not children:
             raise ValueError("RouterBackend needs at least one child backend")
@@ -324,7 +325,8 @@ class RouterBackend:
                 self._wire_rmanagers()
             for i in self.prefill_only:
                 self.children[i].scheduler.prefill_only = True
-            self.handoff = KVHandoff(self, mode=handoff_mode)
+            self.handoff = KVHandoff(self, mode=handoff_mode,
+                                     defer_cap=handoff_defer_cap)
         # telemetry: children constructed with tracing enabled each carry a
         # Tracer — assign them per-instance track ids, give the router its
         # own track (placement, board, network events) one past the last

@@ -83,10 +83,16 @@ class SimResult:
     # modeled network time spent on copies + lease RPCs
     borrowed_pages: int = 0
     net_time: float = 0.0
+    # host swap tier: swap-out / swap-in events and total PCIe time charged
+    swapped_out: int = 0
+    swapped_in: int = 0
+    swap_time: float = 0.0
     # disaggregated runs: prefill->decode KV handoffs by path, and the
     # per-role metric timelines (role -> time-ordered rows)
     handoffs_migrated: int = 0
     handoffs_leased: int = 0
+    handoff_deferrals: int = 0
+    handoff_fallbacks: int = 0
     role_timelines: Optional[Dict[str, List[Dict]]] = None
     # telemetry (``trace=True`` runs only): merged tracer events on the
     # virtual clock, and per-instance metric timelines (instance -> rows)
@@ -275,6 +281,10 @@ class SimBackend:
                  prefix_cache: bool = False,
                  max_preemptions: Optional[int] = None,
                  chunk_policy: str = "decode_first",
+                 host_blocks: int = 0,
+                 swap_mode: str = "sacrifice",
+                 victim_policy: str = "lifo",
+                 cache_spill_pages: int = 0,
                  cost: Optional[CostModel] = None,
                  net: Optional[NetworkModel] = None,
                  trace: bool = False):
@@ -286,8 +296,17 @@ class SimBackend:
         # behavior, which flattered copy-mode sharing).
         self.net = net
         self.net_time = 0.0
-        self.allocator = BlockAllocator(num_blocks, block_size)
-        self.prefix_cache = PrefixCache(self.allocator) if prefix_cache \
+        # the PCIe lane is always charged — a swap is never free, even when
+        # the interconnect model is off (swap traffic rides host PCIe, not
+        # the network; only the bandwidth figure is shared via NetworkModel)
+        self.swap_net = net if net is not None else NetworkModel()
+        self.swap_time_s = 0.0
+        self.swapped_out = 0
+        self.swapped_in = 0
+        self.allocator = BlockAllocator(num_blocks, block_size,
+                                        host_blocks=host_blocks)
+        self.prefix_cache = PrefixCache(
+            self.allocator, spill_budget=cache_spill_pages) if prefix_cache \
             else None
         self.scheduler = IterationScheduler(
             self.allocator, max_running=max_running,
@@ -296,7 +315,13 @@ class SimBackend:
             chunk_policy=chunk_policy,
             # sim outputs are placeholder ids — adopting them into the radix
             # tree would cache meaningless pages
-            cache_generated=False)
+            cache_generated=False,
+            swap_mode=swap_mode, victim_policy=victim_policy,
+            # "auto" resolves per victim against the cost model: swap when
+            # the PCIe round trip (out now + in later) undercuts recomputing
+            # the victim's context from scratch
+            swap_decider=self._swap_worth_it if swap_mode == "auto"
+            else None)
         self._now = 0.0
         self.iterations = 0
         self.preemptions = 0
@@ -311,6 +336,17 @@ class SimBackend:
         else:
             self.trace = None
             self.metrics = None
+
+    def _swap_worth_it(self, req: Request, n_pages: int) -> bool:
+        """swap_mode="auto" decision: is this victim's KV worth the PCIe
+        round trip? Recomputing its computed context costs linear-layer
+        FLOPs plus the quadratic attention reads; swapping costs two
+        transfers of its pages. Short contexts recompute, long ones swap —
+        the crossover ``benchmarks/swap_sweep.py`` measures."""
+        ctx = req.prefilled_len + req.n_generated
+        recompute = self.cost.c_token * ctx + \
+            self.cost.c_ctx * self.cost.prefill_read_tokens(0, ctx)
+        return 2.0 * self.swap_net.swap_time(n_pages) < recompute
 
     # -- ServingBackend protocol ----------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -341,6 +377,18 @@ class SimBackend:
             tr.iteration = self.iterations
         plan = self.scheduler.schedule()
         self.preemptions += len(plan.preempted)
+        if plan.swap_out or plan.swap_in:
+            # charge the PCIe lane on the virtual clock, one batched DMA
+            # per direction per iteration (transfers serialize with compute
+            # here — a conservative model; real engines overlap them)
+            t_swap = self.swap_net.swap_time(
+                sum(len(p) for _, p in plan.swap_out)) + \
+                self.swap_net.swap_time(
+                    sum(len(p) for _, p in plan.swap_in))
+            self._now += t_swap
+            self.swap_time_s += t_swap
+            self.swapped_out += len(plan.swap_out)
+            self.swapped_in += len(plan.swap_in)
         if plan.empty:
             # nothing computed, but a preemption may still have happened
             # (a lone request outgrowing the whole pool preempts *itself*,
@@ -407,12 +455,17 @@ class SimBackend:
             m.gauge("running", len(self.scheduler.running))
             m.gauge("waiting", len(self.scheduler.waiting))
             m.gauge("net_time_s", self.net_time)
+            if self.allocator.num_host_blocks:
+                m.gauge("swapped_pages", self.allocator.swapped_pages)
+                m.gauge("swap_time_s", self.swap_time_s)
             if self.prefix_cache is not None:
                 m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
             m.count("tokens", plan.token_count())
             m.count("decode_tokens", len(plan.decode))
             m.count("prefill_tokens", sum(c.length for c in plan.chunks))
             m.count("preemptions", len(plan.preempted))
+            m.count("swap_outs", len(plan.swap_out))
+            m.count("swap_ins", len(plan.swap_in))
             m.observe("iteration_time_s", self._now - t_start)
             m.snapshot(self._now, self.iterations)
         self.iterations += 1
@@ -434,7 +487,12 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    max_tokens_per_iter: int = 8192,
                    prefix_cache: bool = False,
                    chunk_policy: str = "decode_first",
+                   max_preemptions: Optional[int] = None,
+                   host_blocks: int = 0,
+                   swap_mode: str = "sacrifice",
+                   victim_policy: str = "lifo",
                    cost: Optional[CostModel] = None,
+                   net: Optional[NetworkModel] = None,
                    trace: bool = False) -> SimResult:
     """Replay ``requests`` through :class:`SimBackend` behind the LLMService
     front-end (one drive loop for engine and simulator alike).
@@ -444,14 +502,22 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
     e.g. from :func:`make_shared_prefix_workload`).
     ``chunk_policy``: chunked-prefill budget policy (``decode_first`` |
     ``prefill_first`` | ``monolithic`` | legacy ``solo``), see
-    :class:`~repro.core.scheduling.iteration.IterationScheduler`."""
+    :class:`~repro.core.scheduling.iteration.IterationScheduler`.
+    ``host_blocks`` / ``swap_mode`` / ``victim_policy``: host swap tier —
+    preemption victims' KV moves to host pages over a modeled PCIe lane
+    (``net.pcie_gbps``) instead of being recomputed; see SWAP_MODES /
+    VICTIM_POLICIES in the scheduler module."""
     from repro.serving.api import LLMService  # late: api imports Request
 
     backend = SimBackend(num_blocks=num_blocks, block_size=block_size,
                          max_running=max_running,
                          max_tokens_per_iter=max_tokens_per_iter,
                          prefix_cache=prefix_cache,
-                         chunk_policy=chunk_policy, cost=cost, trace=trace)
+                         max_preemptions=max_preemptions,
+                         host_blocks=host_blocks, swap_mode=swap_mode,
+                         victim_policy=victim_policy,
+                         chunk_policy=chunk_policy, cost=cost, net=net,
+                         trace=trace)
     svc = LLMService(backend)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -459,7 +525,10 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
     res = SimResult(list(requests), makespan=backend.clock(),
                     peak_memory_frac=backend.peak_memory_frac,
                     kv_utilization=backend.kv_utilization,
-                    preemptions=backend.preemptions)
+                    preemptions=backend.preemptions,
+                    swapped_out=backend.swapped_out,
+                    swapped_in=backend.swapped_in,
+                    swap_time=backend.swap_time_s)
     if backend.prefix_cache is not None:
         res.prefix_hit_rate = backend.prefix_cache.hit_rate
         res.cached_pages = backend.prefix_cache.num_pages
@@ -543,6 +612,7 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
 
 def simulate_disagg(requests: Sequence[Request], *, roles: str = "2p2d",
                     handoff_mode: str = "auto",
+                    handoff_defer_cap: int = 8,
                     policy: str = "least_loaded",
                     prefix_cache: bool = True,
                     blocks_per_instance: int = 1800, block_size: int = 16,
@@ -580,7 +650,8 @@ def simulate_disagg(requests: Sequence[Request], *, roles: str = "2p2d",
                            trace=trace)
                 for _ in role_list]
     router = RouterBackend(children, policy=policy, roles=role_list,
-                           handoff_mode=handoff_mode, net=net)
+                           handoff_mode=handoff_mode,
+                           handoff_defer_cap=handoff_defer_cap, net=net)
     svc = LLMService(router)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)
@@ -601,6 +672,8 @@ def simulate_disagg(requests: Sequence[Request], *, roles: str = "2p2d",
     res.net_time = sum(getattr(c, "net_time", 0.0) for c in children)
     res.handoffs_migrated = router.handoff.handoffs_migrated
     res.handoffs_leased = router.handoff.handoffs_leased
+    res.handoff_deferrals = router.handoff.deferrals
+    res.handoff_fallbacks = router.handoff.fallbacks
     if trace:
         res.events = router.trace_events()
         res.timelines = router.metrics_timelines()

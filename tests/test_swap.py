@@ -1,0 +1,559 @@
+"""Swap-to-host KV tier: preempted KV survives on host pages instead of
+being recomputed.
+
+Covers the PR's acceptance criteria and satellites: allocator host-tier
+ledger round trips (and ``free_table`` draining host pages — satellite 3),
+scheduler swap-out/swap-in semantics (a swapped request resumes decode with
+NO re-prefill — the tentpole claim), victim policies, the abandon path for
+snapshots that can never fit again, the preempted-victim prefix-credit fix
+(suffix-only recompute — satellite 2), radix spill-to-host, the sim page-
+conservation property (hypothesis), engine swap round-trip token identity
+vs the fp32 oracle, and the KVHandoff deferral-starvation fallback
+(satellite 1)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs import smoke_config
+from repro.core.paging import BlockAllocator, OutOfBlocks, OutOfHostBlocks
+from repro.core.prefixcache import PrefixCache
+from repro.core.scheduling import IterationScheduler, Phase, Request
+from repro.core.scheduling.iteration import (SWAP_MODES, VICTIM_POLICIES,
+                                             IterationPlan)
+from repro.models import Model
+from repro.serving.engine import EngineConfig, PagedEngine
+from repro.serving.simulator import SimBackend, make_workload, simulate_paged
+
+PS = 8  # page size used throughout
+
+
+def _drive(s, *reqs, max_iters=500):
+    for r in reqs:
+        s.add_request(r)
+    it = 0.0
+    for _ in range(max_iters):
+        plan = s.schedule()
+        if plan.empty and not plan.swap_out and not plan.swap_in \
+                and not s.waiting:
+            return it
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+        s.complete_iteration(plan, it)
+        it += 1.0
+    raise AssertionError("scheduler did not drain")
+
+
+def _table_of(alloc, n_tokens):
+    """A fully-populated device table, as the scheduler would build it."""
+    from repro.core.paging.allocator import BlockTable
+    t = BlockTable(blocks=[], num_tokens=0)
+    alloc.append_tokens(t, n_tokens)
+    return t
+
+
+# -- allocator: host-tier ledger ----------------------------------------------
+
+def test_allocator_swap_round_trip_ledger():
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 3 * PS)
+    assert a.num_free == 5 and a.swapped_pages == 0
+
+    pairs = a.swap_out(t)
+    assert len(pairs) == 3 and t.on_host
+    assert not t.blocks and len(t.host_blocks) == 3
+    assert a.num_free == 8, "device pages must be freed by swap-out"
+    assert a.swapped_pages == 3 and a.host_num_free == 5
+    assert t.num_tokens == 3 * PS, "logical length survives the swap"
+
+    pairs_in = a.swap_in(t)
+    assert len(pairs_in) == 3 and not t.on_host
+    assert len(t.blocks) == 3 and not t.host_blocks
+    assert a.num_free == 5 and a.swapped_pages == 0 and a.host_num_free == 8
+    a.free_table(t)
+    assert a.num_free == 8
+
+
+def test_allocator_swap_out_keeps_tree_shared_pages():
+    """swap_out only drops THIS table's device refs: a page also held by
+    the radix tree (refcount 2) must survive for the other holder."""
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 2 * PS)
+    shared = t.blocks[0]
+    a.incref(shared)  # the radix tree's hold
+    a.swap_out(t)
+    assert a.refcount_of(shared) == 1, "shared page must stay alive"
+    a.decref(shared)
+    assert a.num_free == 8
+
+
+def test_free_table_on_host_releases_host_pages():
+    """Satellite 3: freeing a swapped table (finish/abandon while on host)
+    must return its HOST pages too — the ledger drains to empty."""
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 3 * PS)
+    a.swap_out(t)
+    assert a.swapped_pages == 3
+    a.free_table(t)
+    assert a.swapped_pages == 0 and a.host_num_free == 8
+    assert a.num_free == 8 and a.num_used == 0
+
+
+def test_allocator_host_exhaustion_and_double_free():
+    a = BlockAllocator(8, PS, host_blocks=2)
+    t = _table_of(a, 3 * PS)
+    assert not a.can_swap_out(t), "3 pages cannot fit in 2 host blocks"
+    with pytest.raises(OutOfHostBlocks):
+        a.swap_out(t)
+    b = a.alloc_host_block()
+    a.free_host_block(b)
+    with pytest.raises(ValueError):
+        a.free_host_block(b)
+    a.free_table(t)
+
+
+def test_allocator_swap_in_raises_untouched_when_device_full():
+    a = BlockAllocator(4, PS, host_blocks=8)
+    t = _table_of(a, 3 * PS)
+    a.swap_out(t)
+    squatter = _table_of(a, 2 * PS)  # 2 of 4 device pages taken
+    with pytest.raises(OutOfBlocks):
+        a.swap_in(t)
+    assert t.on_host and len(t.host_blocks) == 3, \
+        "a failed swap-in must leave the host snapshot untouched"
+    a.free_table(squatter)
+    a.swap_in(t)
+    a.free_table(t)
+    assert a.num_free == 4 and a.host_num_free == 8
+
+
+# -- scheduler: swap as a preemption mode --------------------------------------
+
+def _crunch_scheduler(**kw):
+    """Two decoders on a device sized so growth forces one eviction."""
+    kw.setdefault("swap_mode", "swap")
+    a = BlockAllocator(8, PS, host_blocks=16)
+    s = IterationScheduler(a, max_tokens_per_iter=64, **kw)
+    return a, s
+
+
+def test_swap_out_resumes_decode_without_reprefill():
+    """THE tentpole acceptance: a swapped-out decoder re-enters WAITING
+    holding host pages, swaps back in once pages free up, and resumes
+    decode with ZERO further prefill chunks — prefilled_len, output, and
+    the no-recompute budget all survive the round trip."""
+    a, s = _crunch_scheduler()
+    A = Request(0, 0.0, list(range(17)), max_new_tokens=24)
+    B = Request(1, 0.0, list(range(100, 117)), max_new_tokens=24)
+    chunks_after_swap_in = []
+    swapped_back = set()
+    for r in (A, B):
+        s.add_request(r)
+    it = 0.0
+    for _ in range(200):
+        plan = s.schedule()
+        for req, _pairs in plan.swap_in:
+            swapped_back.add(req.request_id)
+        chunks_after_swap_in += [c for c in plan.chunks
+                                 if c.req.request_id in swapped_back]
+        if plan.empty and not plan.swap_out and not plan.swap_in \
+                and not s.waiting:
+            break
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+        s.complete_iteration(plan, it)
+        it += 1.0
+    assert A.phase == Phase.FINISHED and B.phase == Phase.FINISHED
+    victim = A if A.swaps else B
+    assert victim.swaps >= 1, "the crunch must have forced a swap"
+    assert victim.preemptions == 0, \
+        "a swap must not count against the recompute/drop budget"
+    assert victim.request_id in swapped_back
+    assert not chunks_after_swap_in, \
+        "no prefill chunk may follow a decode-phase swap-in"
+    assert len(victim.output) == 24, "every granted token was kept"
+    # ledger drains to empty after teardown (satellite 3's invariant)
+    assert a.num_free == a.num_blocks and a.swapped_pages == 0
+
+
+def test_swapped_victim_state_while_on_host():
+    a, s = _crunch_scheduler()
+    A = Request(0, 0.0, list(range(17)), max_new_tokens=24)
+    B = Request(1, 0.0, list(range(100, 117)), max_new_tokens=24)
+    for r in (A, B):
+        s.add_request(r)
+    victim = None
+    for it in range(200):
+        plan = s.schedule()
+        if plan.swap_out:
+            victim = plan.swap_out[0][0]
+            break
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+        s.complete_iteration(plan, float(it))
+    assert victim is not None
+    assert victim.phase == Phase.WAITING
+    assert s.waiting and s.waiting[0] is victim, \
+        "a swapped victim waits at the head of the line (FCFS)"
+    assert victim.request_id in s.tables, \
+        "the table must STAY registered — it holds the host pages"
+    assert s.tables[victim.request_id].on_host
+    assert victim.prefilled_len == victim.prompt_len, \
+        "swap must not erase prefill progress"
+
+
+@pytest.mark.parametrize("policy", VICTIM_POLICIES)
+def test_victim_policy_picks_the_right_loser(policy):
+    a = BlockAllocator(32, PS, host_blocks=32)
+    s = IterationScheduler(a, max_tokens_per_iter=64, swap_mode="swap",
+                           victim_policy=policy)
+    reqs = [Request(i, 0.0, list(range(i * 50, i * 50 + 4)),
+                    max_new_tokens=4) for i in range(3)]
+    for r in reqs:
+        s.add_request(r)
+    plan = s.schedule()  # all three admitted
+    for r in plan.prefill:
+        r.output.append(0)
+    s.complete_iteration(plan, 0.0)
+    # recency: only request 1 got a decode grant in the next iteration
+    reqs[0].last_planned_iter = 5
+    reqs[1].last_planned_iter = 1
+    reqs[2].last_planned_iter = 5
+    victim = s._pick_victim(exclude=reqs[0])
+    # candidates exclude the grower: lifo takes the newest, fifo the
+    # oldest remaining, lru the least recently scheduled
+    want = {"lifo": reqs[2], "fifo": reqs[1], "lru": reqs[1]}[policy]
+    assert victim is want
+
+
+def test_abandon_swap_degrades_to_sacrifice():
+    """A snapshot whose context can never fit on device again (it filled
+    the pool and still must grow) is dropped: the request re-enters the
+    classic recompute path and its drop budget applies."""
+    a = BlockAllocator(8, PS, host_blocks=16)
+    s = IterationScheduler(a, max_tokens_per_iter=64, swap_mode="swap")
+    r = Request(0, 0.0, list(range(7 * PS)), max_new_tokens=16)
+    s.add_request(r)
+    for it in range(40):  # prefill 7 pages, then decode into page 8
+        plan = s.schedule()
+        for q in plan.prefill + plan.decode:
+            q.output.append(0)
+        s.complete_iteration(plan, float(it))
+        if r.n_generated >= PS:  # the table now spans all 8 device pages
+            break
+    g = r.n_generated
+    plan = IterationPlan([], [], [])
+    s._preempt_or_swap(r, plan, trigger=-1, kind="victim")
+    assert r.swaps == 1 and plan.swap_out
+    # swap-in needs 8 pages + 1 growth > num_blocks - watermark: abandon
+    plan = s.schedule()
+    assert plan.preempted == [r]
+    assert r.phase == Phase.PREEMPTED and r.preemptions == 1
+    assert r.request_id not in s.tables
+    assert a.swapped_pages == 0, "the dead snapshot's host pages are freed"
+    assert r.prompt_len == 7 * PS + g, "generated tokens merged into prompt"
+
+
+def test_swap_auto_uses_decider():
+    decisions = []
+
+    def decider(req, n_pages):
+        decisions.append((req.request_id, n_pages))
+        return False  # always recompute
+
+    a = BlockAllocator(8, PS, host_blocks=16)
+    s = IterationScheduler(a, max_tokens_per_iter=64, swap_mode="auto",
+                           swap_decider=decider)
+    A = Request(0, 0.0, list(range(17)), max_new_tokens=24)
+    B = Request(1, 0.0, list(range(100, 117)), max_new_tokens=24)
+    _drive(s, A, B)
+    assert decisions, "the crunch must have consulted the decider"
+    assert A.swaps == B.swaps == 0
+    assert A.preemptions + B.preemptions >= 1
+
+
+# -- satellite 2: preempted victims keep their prefix-cache credit -------------
+
+def test_sacrificed_victim_recomputes_only_uncached_suffix():
+    """Regression: ``_preempt`` used to zero ``prefilled_len`` without
+    banking the computed pages, so a victim re-prefilled from token 0.
+    Now the full prompt pages are inserted into the radix tree before the
+    table is freed, and re-admission chunks only the uncached suffix."""
+    a = BlockAllocator(64, PS, host_blocks=0)
+    cache = PrefixCache(a)
+    s = IterationScheduler(a, max_tokens_per_iter=64, prefix_cache=cache)
+    r = Request(0, 0.0, list(range(3 * PS)), max_new_tokens=8)
+    s.add_request(r)
+    for it in range(3):  # prefill + a couple of decode tokens
+        plan = s.schedule()
+        for q in plan.prefill + plan.decode:
+            q.output.append(0)
+        s.complete_iteration(plan, float(it))
+    assert r.n_generated >= 1
+    s._preempt(r)
+    assert r.prefilled_len == 0 and r.phase == Phase.PREEMPTED
+    plan = s.schedule()  # re-admission re-probes the radix tree
+    assert r.num_cached_tokens >= 2 * PS, \
+        "the victim's own prefilled pages must be served from cache"
+    assert plan.chunks and plan.chunks[0].req is r
+    assert plan.chunks[0].start == r.num_cached_tokens > 0, \
+        "recompute must cover only the uncached suffix"
+
+
+def test_mid_prefill_victim_banks_completed_chunks():
+    """The same credit applies to a victim preempted BETWEEN chunks: its
+    completed chunks' pages are real KV and must not be recomputed."""
+    a = BlockAllocator(64, PS)
+    cache = PrefixCache(a)
+    s = IterationScheduler(a, max_tokens_per_iter=2 * PS,
+                           prefix_cache=cache)
+    r = Request(0, 0.0, list(range(6 * PS)), max_new_tokens=4)
+    s.add_request(r)
+    plan = s.schedule()  # first chunk: tokens [0, 16)
+    s.complete_iteration(plan, 0.0)
+    assert r.prefilled_len == 2 * PS
+    s._preempt(r)
+    plan = s.schedule()
+    assert r.num_cached_tokens == 2 * PS
+    assert plan.chunks[0].start == 2 * PS, \
+        "chunking must resume at the banked pages, not token 0"
+
+
+# -- sim: conservation property + crossover plumbing ---------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(num_blocks=st.integers(16, 48), host_blocks=st.integers(8, 64),
+       seed=st.integers(0, 10_000))
+def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
+                                               seed):
+    """Property: the device ledger (used + free == total) and the host
+    ledger (swapped + free == total) hold after EVERY sim iteration, for
+    any pressure pattern the workload generates."""
+    backend = SimBackend(num_blocks=num_blocks, block_size=PS,
+                         max_running=8, max_tokens_per_iter=128,
+                         host_blocks=host_blocks, swap_mode="swap")
+    for r in make_workload(12, rate=200.0, dist="alpaca", seed=seed,
+                           max_len=num_blocks * PS // 2):
+        backend.add_request(r)
+    a = backend.allocator
+    for _ in range(5000):
+        if not backend.has_work:
+            break
+        backend.step()
+        assert a.num_used + a.num_free == a.num_blocks
+        assert a.swapped_pages + a.host_num_free == a.num_host_blocks
+        assert a.swapped_pages == sum(
+            len(t.host_blocks) for t in backend.scheduler.tables.values())
+    else:
+        raise AssertionError("sim did not drain")
+    assert a.num_used == 0 and a.swapped_pages == 0, \
+        "both ledgers drain to empty at teardown"
+
+
+def test_sim_swap_counters_and_result_fields():
+    reqs = [Request(i, i * 0.05, [], prompt_len=6144, max_new_tokens=256)
+            for i in range(8)]
+    res = simulate_paged(reqs, num_blocks=1180, block_size=16,
+                         max_tokens_per_iter=4096, host_blocks=1536,
+                         swap_mode="swap")
+    assert res.completed_frac == 1.0
+    assert res.swapped_out == res.swapped_in > 0
+    assert res.swap_time > 0.0, "PCIe time must be on the virtual clock"
+    assert res.preemptions == 0
+
+
+def test_sim_swap_rejects_bad_mode():
+    with pytest.raises(ValueError, match="swap_mode"):
+        SimBackend(num_blocks=16, block_size=PS, swap_mode="keep")
+    with pytest.raises(ValueError, match="victim_policy"):
+        SimBackend(num_blocks=16, block_size=PS, victim_policy="random")
+    assert SWAP_MODES == ("sacrifice", "swap", "auto")
+
+
+# -- radix spill tier ----------------------------------------------------------
+
+def test_prefix_cache_spills_and_restores():
+    a = BlockAllocator(8, PS, host_blocks=8)
+    cache = PrefixCache(a, spill_budget=4)
+    prompt = list(range(2 * PS))
+    t = _table_of(a, 2 * PS)
+    cache.insert(prompt, t.blocks)
+    a.free_table(t)
+    used_before = a.num_used
+    # only leaves spill: the 2-page chain gives one spill candidate
+    cache.evict(1)
+    assert cache.spilled_pages == 1 and a.swapped_pages == 1
+    assert a.num_used == used_before - 1
+    path = cache.match(prompt)
+    assert len(path) == 2, "a spilled prefix still serves hits (restored)"
+    assert cache.restored_pages == 1 and a.swapped_pages == 0
+    assert all(node.block >= 0 for node in path)
+    cache.clear()
+    assert a.num_used == 0 and a.swapped_pages == 0
+
+
+def test_prefix_cache_spill_budget_is_lru():
+    a = BlockAllocator(16, PS, host_blocks=16)
+    cache = PrefixCache(a, spill_budget=1)
+    for base in (0, 1000):  # two sibling one-page prefixes
+        t = _table_of(a, PS)
+        cache.insert(list(range(base, base + PS)), t.blocks)
+        a.free_table(t)
+    dropped_before = cache.evicted_pages
+    cache.evict(2)  # budget 1: the first spill is dropped for the second
+    assert cache.spilled_pages == 2, "both eviction candidates spilled"
+    assert a.swapped_pages == 1, "but only one host slot may stay taken"
+    assert cache.evicted_pages == dropped_before + 1
+    cache.clear()
+    assert a.swapped_pages == 0 and a.num_used == 0
+
+
+def test_prefix_cache_probe_counts_spilled_as_hit():
+    a = BlockAllocator(8, PS, host_blocks=8)
+    cache = PrefixCache(a, spill_budget=4)
+    prompt = list(range(PS))
+    t = _table_of(a, PS)
+    cache.insert(prompt, t.blocks)
+    a.free_table(t)
+    cache.evict(1)
+    path = cache.match(prompt, probe=True)
+    assert len(path) == 1, "a probe must count spilled pages as cached"
+    assert a.swapped_pages == 1, "a probe must not restore"
+
+
+# -- engine: swap round trip is token-identical --------------------------------
+
+@pytest.fixture(scope="module")
+def model_setup_f32():
+    cfg = smoke_config("h2o-danube-1.8b")
+    cfg = dataclasses.replace(cfg, sliding_window=None, dtype="float32",
+                              logits_fp32=True)
+    model = Model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _oracle(model, params, cfg, prompt, n):
+    import jax.numpy as jnp
+    tokens = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = model.prefill(params, tokens, seq_capacity=128)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    pos = len(prompt)
+    while len(out) < n:
+        lg, caches = model.decode_step(params, jnp.array([[tok]], jnp.int32),
+                                       jnp.array([pos], jnp.int32), caches)
+        tok = int(jnp.argmax(lg[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_engine_swap_round_trip_token_identity(model_setup_f32):
+    """ACCEPTANCE: a request swapped to host mid-decode and back resumes
+    mid-sequence — no re-prefill (preemptions stays 0), and its greedy
+    tokens match the sequential fp32 oracle exactly."""
+    cfg, model, params = model_setup_f32
+    eng = PagedEngine(cfg, params, EngineConfig(
+        num_pages=8, page_size=PS, max_slots=2, host_pages=16,
+        swap_mode="swap"))
+    # seed 2: both prompts individually match the sequential oracle in a
+    # roomy no-swap run (some seeds hit unrelated fp32 near-ties), so any
+    # mismatch here is attributable to the swap round trip
+    rng = np.random.default_rng(2)
+    reqs = [Request(i, 0.0,
+                    rng.integers(0, cfg.vocab_size, 17).tolist(),
+                    max_new_tokens=20) for i in range(2)]
+    swapped_in, chunks_after = set(), []
+    orig = eng.scheduler.schedule
+
+    def spy():
+        plan = orig()
+        swapped_in.update(r.request_id for r, _ in plan.swap_in)
+        chunks_after.extend(c for c in plan.chunks
+                            if c.req.request_id in swapped_in)
+        return plan
+
+    eng.scheduler.schedule = spy
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_to_completion()
+    assert eng.swapped_out == eng.swapped_in > 0, \
+        "the crunch must force a swap round trip"
+    assert not chunks_after, "no prefill chunk after a swap-in"
+    for r in reqs:
+        assert r.preemptions == 0
+        want = _oracle(model, params, cfg, r.prompt, len(r.full_output))
+        assert r.full_output == want, f"req {r.request_id}"
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    assert eng.allocator.swapped_pages == 0
+
+
+# -- satellite 1: KVHandoff deferral fallback ----------------------------------
+
+def test_handoff_deferral_cap_falls_back_to_prefill_host():
+    """Regression (engineered park): with every decode instance unable to
+    accept, a prefill-complete request used to defer forever. After
+    ``defer_cap`` tries it must decode on its prefill host (mixed-style),
+    with the ``handoff.deferred`` -> ``handoff.fallback`` event pair."""
+    from repro.serving.router import RouterBackend
+    children = [SimBackend(num_blocks=64, block_size=PS, max_running=4,
+                           max_tokens_per_iter=128, trace=True)
+                for _ in range(2)]
+    router = RouterBackend(children, roles=["prefill", "decode"],
+                           handoff_mode="migrate", handoff_defer_cap=3)
+    children[1].scheduler.max_running = 0  # park the only decode instance
+    r = Request(0, 0.0, list(range(12)), max_new_tokens=6)
+    router.add_request(r)
+    for _ in range(200):
+        if r.phase == Phase.FINISHED:
+            break
+        router.step()
+    assert r.phase == Phase.FINISHED, \
+        "the fallback must rescue the request from starvation"
+    assert router.handoff.fallbacks == 1
+    assert router.handoff.deferrals == 3
+    assert router.handoff.handoffs == 0
+    assert r.instance_id == 0, "it never left the prefill host"
+    events = router.trace_events()
+    deferred = [e for e in events
+                if e.cat == "handoff" and e.name == "deferred"]
+    fallback = [e for e in events
+                if e.cat == "handoff" and e.name == "fallback"]
+    assert len(deferred) == 3 and len(fallback) == 1
+    assert fallback[0].rid == r.request_id
+    assert not children[0].scheduler.decode_exempt, \
+        "finish() must clean the exemption up"
+
+
+def test_handoff_fallback_does_not_block_later_handoffs():
+    """Once the parked decode instance frees up, subsequent requests hand
+    off normally — the fallback is per-request, not a mode switch."""
+    from repro.serving.router import RouterBackend
+    children = [SimBackend(num_blocks=64, block_size=PS, max_running=4,
+                           max_tokens_per_iter=128)
+                for _ in range(2)]
+    router = RouterBackend(children, roles=["prefill", "decode"],
+                           handoff_mode="migrate", handoff_defer_cap=2)
+    children[1].scheduler.max_running = 0
+    r1 = Request(0, 0.0, list(range(12)), max_new_tokens=6)
+    router.add_request(r1)
+    for _ in range(50):
+        if r1.phase == Phase.FINISHED:
+            break
+        router.step()
+    assert router.handoff.fallbacks == 1
+    children[1].scheduler.max_running = 4  # un-park
+    r2 = Request(1, router.clock() + 0.001, list(range(50, 62)),
+                 max_new_tokens=6)
+    router.add_request(r2)
+    for _ in range(200):
+        if r2.phase == Phase.FINISHED:
+            break
+        router.step()
+    assert r2.phase == Phase.FINISHED
+    assert router.handoff.handoffs == 1, "the next request hands off"
+    assert r2.instance_id == 1

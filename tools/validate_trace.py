@@ -9,7 +9,10 @@ Usage:
 Validation runs the structural schema checks shared with the exporter
 tests (``repro.core.telemetry.validate_trace_events``): top-level shape,
 required per-event fields, known phase codes, non-negative durations, and
-balanced async begin/end spans. Exit status is non-zero on any problem.
+balanced async begin/end spans — plus the host-swap invariant
+(``repro.core.telemetry.validate_swap_balance``): per request,
+``sched.swap_out``/``sched.swap_in`` instants must alternate with at most
+one unmatched trailing swap_out. Exit status is non-zero on any problem.
 
 ``--check-disabled-overhead`` runs the chunked-prefill sim path twice —
 telemetry off, then on — and asserts with ``tracemalloc`` that the
@@ -30,7 +33,8 @@ import tracemalloc
 
 
 def validate_files(paths) -> int:
-    from repro.core.telemetry import validate_trace_events
+    from repro.core.telemetry import validate_swap_balance, \
+        validate_trace_events
     bad = 0
     for path in paths:
         try:
@@ -41,6 +45,9 @@ def validate_files(paths) -> int:
             bad += 1
             continue
         errors = validate_trace_events(obj)
+        # host-swap invariant: per request, swap_out/swap_in instants
+        # alternate (at most one unmatched trailing swap_out)
+        errors += validate_swap_balance(obj)
         n = len(obj.get("traceEvents", obj) if isinstance(obj, (dict, list))
                 else [])
         if errors:
