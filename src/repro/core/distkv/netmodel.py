@@ -50,6 +50,11 @@ class NetworkModel:
     # throughput; t_swap_fixed covers the DMA setup per batched transfer
     pcie_gbps: float = 256.0
     t_swap_fixed: float = 20e-6
+    # peer spill lane: device->device page movement between co-located
+    # instances rides an NVLink-class link — much wider than the PCIe host
+    # lane, which is what makes a neighbor's free device memory a better
+    # spill target than host when one is available
+    nvlink_gbps: float = 600.0
 
     def swap_time(self, n_pages: int) -> float:
         """One direction of a swap: ``n_pages`` over PCIe plus one DMA
@@ -57,6 +62,15 @@ class NetworkModel:
         if n_pages <= 0:
             return 0.0
         wire = self.page_bytes * 8.0 / (self.pcie_gbps * 1e9)
+        return self.t_swap_fixed + n_pages * wire
+
+    def peer_copy_time(self, n_pages: int) -> float:
+        """One direction of a peer spill/restore: ``n_pages`` device pages
+        moved to/from a neighbor instance over the NVLink-class lane, plus
+        one transfer setup."""
+        if n_pages <= 0:
+            return 0.0
+        wire = self.page_bytes * 8.0 / (self.nvlink_gbps * 1e9)
         return self.t_swap_fixed + n_pages * wire
 
     def page_copy_time(self, n_pages: int) -> float:

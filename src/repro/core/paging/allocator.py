@@ -18,6 +18,21 @@ includes them, and a table is either device-resident (``blocks``) or
 host-resident (``host_blocks``) — never both. The data movement itself is the
 execution backend's job (the engine copies page payloads, the simulator
 charges PCIe time); the allocator only keeps the ledgers honest.
+
+Pending-out ledger (overlapped swaps). A synchronous :meth:`swap_out` frees
+device pages in the same scheduling step the copy is issued, which forces the
+backend to complete the DMA before compute. The split
+:meth:`swap_out_issue` / :meth:`swap_out_complete` /
+:meth:`swap_out_cancel` API lets a *speculative* swap-out overlap the next
+iteration's compute: issue moves the table's device references into an
+in-flight ledger (the pages stay allocated — ``num_free`` does NOT grow — so
+nothing can reallocate-and-clobber a DMA source mid-flight), complete drops
+those references one iteration later (pages free then, exactly as a
+synchronous swap-out would have left them), and cancel puts the references
+back on the table and releases the host blocks (the pages never left).
+Conservation holds throughout: ``num_used + num_free == num_blocks`` with
+in-flight pages counted used, and ``pending_out_pages`` exposes the
+in-flight count for invariant checks.
 """
 
 from __future__ import annotations
@@ -65,6 +80,11 @@ class BlockAllocator:
         # suffices — no refcounts, no COW
         self.num_host_blocks = host_blocks
         self.host_free_list: List[int] = list(range(host_blocks - 1, -1, -1))
+        # in-flight swap-outs: ticket -> (device, host) pairs whose device
+        # references the ledger owns until complete/cancel resolves them
+        self._pending_out: Dict[int, List[Tuple[int, int]]] = {}
+        self._pending_seq = 0
+        self.pending_out_pages = 0
 
     # -- raw blocks -----------------------------------------------------------
     @property
@@ -148,6 +168,54 @@ class BlockAllocator:
             table.host_blocks.append(host)
             self.decref(dev)
         table.blocks.clear()
+        return pairs
+
+    def swap_out_issue(self, table: BlockTable
+                       ) -> Tuple[int, List[Tuple[int, int]]]:
+        """Start an overlapped swap-out: allocate host pages and move the
+        table's device references into the pending ledger WITHOUT freeing
+        them — the DMA sources stay allocated until
+        :meth:`swap_out_complete` so no same- or next-iteration write can
+        land on them. Returns ``(ticket, (device, host) pairs)``; the table
+        is host-resident immediately (``blocks`` empty, ``host_blocks``
+        set), exactly as after a synchronous :meth:`swap_out`."""
+        if table.on_host:
+            raise ValueError("swap_out of an already-swapped table")
+        if len(table.blocks) > len(self.host_free_list):
+            raise OutOfHostBlocks
+        pairs = []
+        for dev in table.blocks:
+            host = self.alloc_host_block()
+            pairs.append((dev, host))
+            table.host_blocks.append(host)
+        table.blocks.clear()  # the ledger owns the device refs now
+        ticket = self._pending_seq
+        self._pending_seq += 1
+        self._pending_out[ticket] = pairs
+        self.pending_out_pages += len(pairs)
+        return ticket, pairs
+
+    def swap_out_complete(self, ticket: int) -> List[Tuple[int, int]]:
+        """Resolve an issued swap-out: the copy landed, drop the ledger's
+        device references (pages free now for exclusive owners; tree-shared
+        pages survive for their other holders)."""
+        pairs = self._pending_out.pop(ticket)
+        self.pending_out_pages -= len(pairs)
+        for dev, _ in pairs:
+            self.decref(dev)
+        return pairs
+
+    def swap_out_cancel(self, ticket: int, table: BlockTable
+                        ) -> List[Tuple[int, int]]:
+        """Abort an issued swap-out: pressure receded before the copy was
+        needed. Device references move back onto ``table`` (the pages never
+        left — no payload was lost) and the host pages are released."""
+        pairs = self._pending_out.pop(ticket)
+        self.pending_out_pages -= len(pairs)
+        table.blocks.extend(dev for dev, _ in pairs)
+        for _, host in pairs:
+            self.free_host_block(host)
+        table.host_blocks.clear()
         return pairs
 
     def can_swap_in(self, table: BlockTable) -> bool:

@@ -105,6 +105,11 @@ class RadixNode:
     # spill-to-host: when spilled, ``block`` is -1 and this holds the host
     # page keeping the KV alive (-1 = device-resident)
     host_block: int = -1
+    # spill-to-peer: the KV lives in a *neighbor instance's* device page
+    # (lent rBlock) instead of host — ``block`` is -1, ``host_block`` is -1,
+    # and these name the creditor instance and its physical page
+    peer_home: int = -1
+    peer_block: int = -1
 
 
 class PrefixCache:
@@ -144,6 +149,21 @@ class PrefixCache:
         self.spill_in_fn = None
         self.spilled_pages = 0   # cumulative spill-outs
         self.restored_pages = 0  # cumulative spill-ins (restores)
+        # spill-to-peer tier (wired by a cluster router over the rBlock
+        # lend/borrow machinery; None = host tier only). Tried *before*
+        # host: a neighbor's free device memory restores over the NVLink
+        # lane instead of PCIe.
+        #   peer_spill_fn(dev_block) -> Optional[(home_instance, peer_block)]
+        #     copies the payload out while dev_block is still allocated
+        #   peer_restore_fn(home, peer_block, dev_block)
+        #     copies back onto a fresh local block and repays the loan
+        #   peer_drop_fn(home, peer_block)
+        #     repays the loan without copying (page dies)
+        self.peer_spill_fn = None
+        self.peer_restore_fn = None
+        self.peer_drop_fn = None
+        self.peer_spilled_pages = 0
+        self.peer_restored_pages = 0
 
     # -- lookup -----------------------------------------------------------------
     def match(self, tokens: Sequence[int], *,
@@ -184,17 +204,23 @@ class PrefixCache:
         return path
 
     def _restore(self, node: RadixNode) -> bool:
-        """Spill-in: re-materialize a spilled node onto a device block."""
+        """Spill-in: re-materialize a spilled node onto a device block
+        (from the peer tier or the host tier, wherever it lives)."""
         try:
             dev = self.allocator.alloc_block()
         except OutOfBlocks:
             return False
-        if self.spill_in_fn is not None:
-            self.spill_in_fn([(node.host_block, dev)])
-        self.allocator.free_host_block(node.host_block)
+        if node.peer_block != -1:
+            self.peer_restore_fn(node.peer_home, node.peer_block, dev)
+            node.peer_home = node.peer_block = -1
+            self.peer_restored_pages += 1
+        else:
+            if self.spill_in_fn is not None:
+                self.spill_in_fn([(node.host_block, dev)])
+            self.allocator.free_host_block(node.host_block)
+            node.host_block = -1
         self._spilled.remove(node)
         node.block = dev
-        node.host_block = -1
         self.restored_pages += 1
         return True
 
@@ -275,13 +301,19 @@ class PrefixCache:
             elif child.block == -1:
                 # un-spill in place for free: the inserter just computed
                 # this very page, so adopt its fresh device block and let
-                # the stale host copy go. Also keeps spilled nodes leaves —
-                # we never grow a branch through a host-resident page.
+                # the stale spilled copy go. Also keeps spilled nodes
+                # leaves — we never grow a branch through an off-device
+                # page.
                 self.allocator.incref(blocks[i])
-                self.allocator.free_host_block(child.host_block)
+                if child.peer_block != -1:
+                    if self.peer_drop_fn is not None:
+                        self.peer_drop_fn(child.peer_home, child.peer_block)
+                    child.peer_home = child.peer_block = -1
+                else:
+                    self.allocator.free_host_block(child.host_block)
+                    child.host_block = -1
                 self._spilled.remove(child)
                 child.block = blocks[i]
-                child.host_block = -1
             child.last_access = self._clock
             node = child
         self.inserted_pages += new
@@ -393,13 +425,25 @@ class PrefixCache:
         return freed
 
     def _spill(self, leaf: RadixNode) -> bool:
-        """Move a cold leaf's page to the host tier (bounded LRU budget).
-        Falls back to False (hard eviction) when the host cannot take it."""
+        """Move a cold leaf's page off-device: a neighbor instance's free
+        device memory first (NVLink lane), the host tier second (PCIe).
+        Falls back to False (hard eviction) when neither can take it."""
         if len(self._spilled) >= self.spill_budget:
             # budget full: the coldest spilled page dies so this (more
-            # recently used) one can take its host slot
+            # recently used) one can take its slot
             self._drop_spilled(min(self._spilled,
                                    key=lambda n: n.last_access))
+        if self.peer_spill_fn is not None:
+            # the fn copies the payload while leaf.block is still allocated
+            dst = self.peer_spill_fn(leaf.block)
+            if dst is not None:
+                leaf.peer_home, leaf.peer_block = dst
+                self.allocator.decref(leaf.block)  # refcount 1 -> freed
+                leaf.block = -1
+                self._spilled.append(leaf)
+                self.spilled_pages += 1
+                self.peer_spilled_pages += 1
+                return True
         if self.allocator.host_num_free == 0:
             return False  # host pool exhausted (table swaps hold it)
         host = self.allocator.alloc_host_block()
@@ -413,9 +457,15 @@ class PrefixCache:
         return True
 
     def _drop_spilled(self, node: RadixNode) -> None:
-        """Permanently drop a spilled node (host page freed, node unlinked).
-        Spilled nodes are always leaves — nothing dangles."""
-        self.allocator.free_host_block(node.host_block)
+        """Permanently drop a spilled node (its peer loan repaid or host
+        page freed, node unlinked). Spilled nodes are always leaves —
+        nothing dangles."""
+        if node.peer_block != -1:
+            if self.peer_drop_fn is not None:
+                self.peer_drop_fn(node.peer_home, node.peer_block)
+            node.peer_home = node.peer_block = -1
+        else:
+            self.allocator.free_host_block(node.host_block)
         del node.parent.children[node.key]
         node.parent = None
         self._spilled.remove(node)
@@ -483,4 +533,6 @@ class PrefixCache:
             "spilled_pages": self.spilled_pages,
             "restored_pages": self.restored_pages,
             "spilled_now": len(self._spilled),
+            "peer_spilled_pages": self.peer_spilled_pages,
+            "peer_restored_pages": self.peer_restored_pages,
         }

@@ -101,7 +101,12 @@ SWAP_MODES = ("sacrifice", "swap", "auto")
 #   lifo — youngest running request (least sunk work, the vLLM default)
 #   fifo — oldest running request
 #   lru  — least recently *scheduled* (no decode/chunk granted longest)
-VICTIM_POLICIES = ("lifo", "fifo", "lru")
+#   cost — cheapest to evict per freed page: rank candidates by modeled
+#          eviction seconds (PCIe round trip if the victim would swap,
+#          quadratic recompute if it would sacrifice) divided by the pages
+#          freed (``victim_cost_fn``, or a built-in mirror of the sim's
+#          cost-model constants)
+VICTIM_POLICIES = ("lifo", "fifo", "lru", "cost")
 
 
 @dataclasses.dataclass
@@ -146,12 +151,26 @@ class IterationPlan:
         dataclasses.field(default_factory=list)
     swap_in: List[Tuple[Request, List[Tuple[int, int]]]] = \
         dataclasses.field(default_factory=list)
+    # overlapped (speculative) swap-out lifecycle, same (request, pairs)
+    # shape: ``swap_issue`` starts a device->host copy that double-buffers
+    # against the NEXT iteration's compute, ``swap_complete`` lands it one
+    # iteration later (device pages free only now), ``swap_cancel`` aborts
+    # it because pressure receded (pages never left). Backends use these to
+    # move the payloads (engine) / charge overlap-windowed PCIe time (sim)
+    # and to manage per-request decode slots.
+    swap_issue: List[Tuple[Request, List[Tuple[int, int]]]] = \
+        dataclasses.field(default_factory=list)
+    swap_complete: List[Tuple[Request, List[Tuple[int, int]]]] = \
+        dataclasses.field(default_factory=list)
+    swap_cancel: List[Tuple[Request, List[Tuple[int, int]]]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
         """No *compute* this iteration. Swap-only iterations are still
         "empty" — backends must process ``swap_out``/``swap_in`` (and
-        ``preempted``) before early-returning on this."""
+        ``swap_issue``/``swap_complete``/``swap_cancel``/``preempted``)
+        before early-returning on this."""
         return not (self.chunks or self.prefill or self.decode)
 
     def token_count(self) -> int:
@@ -180,7 +199,10 @@ class IterationScheduler:
                  victim_policy: str = "lifo",
                  swap_decider: Optional[
                      Callable[[Request, int], bool]] = None,
-                 swap_min_tokens: Optional[int] = None):
+                 swap_min_tokens: Optional[int] = None,
+                 victim_cost_fn: Optional[
+                     Callable[[Request, BlockTable], float]] = None,
+                 speculative_swap: bool = False):
         if chunk_policy not in CHUNK_POLICIES:
             raise ValueError(f"chunk_policy must be one of {CHUNK_POLICIES}, "
                              f"got {chunk_policy!r}")
@@ -241,6 +263,34 @@ class IterationScheduler:
         self.swap_decider = swap_decider
         self.swap_min_tokens = swap_min_tokens if swap_min_tokens is not None \
             else 8 * allocator.block_size
+        # cost victim policy: (request, table) -> the raw eviction bill in
+        # seconds (PCIe round trip if the victim would swap, quadratic
+        # recompute if it would sacrifice). _pick_from normalizes by the
+        # pages the eviction actually frees toward the current shortfall,
+        # lower = better victim. The sim wires its CostModel/NetworkModel;
+        # without one a built-in mirror of those constants runs
+        # (see _victim_cost).
+        self.victim_cost_fn = victim_cost_fn
+        # speculative overlapped swap-out: when free pages trend under the
+        # watermark plus the running decodes' imminent page growth, issue a
+        # victim's device->host copy at the END of schedule() so it
+        # double-buffers against the next iteration's compute. The
+        # allocator's pending ledger keeps the DMA-source pages allocated
+        # until the copy completes at the top of the NEXT schedule() — or
+        # the issue is cancelled there if pressure receded (pages never
+        # left, the victim resumes with zero loss).
+        self.speculative_swap = speculative_swap
+        self._pending_swaps: List[Tuple[int, Request,
+                                        List[Tuple[int, int]]]] = []
+        # rids whose speculative swap-out completed: held out of swap-in
+        # readmission until pressure genuinely recedes (avail covers their
+        # need PLUS a watermark of slack). Without this the completed
+        # swap's freed pages readmit the very victim they came from one
+        # iteration later — a pure PCIe round trip that frees nothing —
+        # because the complete lands before any decode has consumed the
+        # pages (the demand path's eviction happens mid-decode-planning,
+        # so its freed pages never look quite big enough to readmit into).
+        self._swap_hold: set = set()
         # data-movement hooks wired by the engine (None in the sim): called
         # synchronously with the allocator's page pairs, swap_out_hook BEFORE
         # any later work this schedule() could reallocate-and-write the freed
@@ -249,6 +299,15 @@ class IterationScheduler:
         self.swap_out_hook: Optional[
             Callable[[List[Tuple[int, int]]], None]] = None
         self.swap_in_hook: Optional[
+            Callable[[List[Tuple[int, int]]], None]] = None
+        # overlapped-swap lifecycle hooks (engine: issue records the pending
+        # copy, complete performs it — the ledger guarantees the source
+        # pages are still intact one iteration later — cancel drops it)
+        self.swap_issue_hook: Optional[
+            Callable[[List[Tuple[int, int]]], None]] = None
+        self.swap_complete_hook: Optional[
+            Callable[[List[Tuple[int, int]]], None]] = None
+        self.swap_cancel_hook: Optional[
             Callable[[List[Tuple[int, int]]], None]] = None
         # KVHandoff fallback (disaggregated serving): request ids a
         # prefill-only instance IS allowed to decode — requests whose
@@ -354,6 +413,12 @@ class IterationScheduler:
                              chunks=[])
         self._budget = self.max_tokens
         self._iter_idx += 1
+        if self._pending_swaps:
+            # every in-flight swap-out resolves exactly one iteration after
+            # issue (double-buffering, not an unbounded queue): complete it
+            # — the overlapped copy landed during last iteration's compute —
+            # or cancel it if pressure receded meanwhile
+            self._resolve_pending_swaps(plan)
         if self.chunk_policy == "prefill_first":
             # decode-page reserve: admissions run BEFORE the decode planner
             # here, so without a reserve an admission can take the very page
@@ -376,7 +441,132 @@ class IterationScheduler:
             self._plan_decodes(plan)
             self._plan_continuations(plan)
             self._plan_admissions(plan)
+        if self.speculative_swap:
+            self._maybe_speculate(plan)
         return plan
+
+    # -- overlapped (speculative) swap-out ------------------------------------
+    def _growth_pages(self, horizon: int = 2) -> int:
+        """Device pages the running decodes will allocate within the next
+        ``horizon`` tokens — the demand side of the speculation trigger."""
+        total = 0
+        for r in self.running:
+            t = self.tables.get(r.request_id)
+            if t is None or t.on_host:
+                continue
+            if r.prefilled_len >= r.prompt_len:
+                total += self.allocator.blocks_needed(t, horizon)
+        return total
+
+    def _maybe_speculate(self, plan: IterationPlan) -> None:
+        """Issue one victim's swap-out BEFORE memory actually runs out, so
+        the PCIe copy rides under the next iteration's compute instead of
+        serializing with it when the demand eviction finally fires."""
+        if self.swap_mode == "sacrifice" or self.prefill_only \
+                or self.allocator.num_host_blocks == 0 \
+                or self._pending_swaps:
+            return
+        # fire only when the pool cannot serve the running decodes' growth
+        # over the lookahead horizon — the same exhaustion signal the
+        # demand path's can_append failure gives, just 1-2 iterations
+        # earlier. No watermark term: decode appends draw the pool below
+        # the watermark freely (only admissions respect it), and firing at
+        # the watermark would evict victims a completion was about to save.
+        if self.allocator.num_free >= self._growth_pages():
+            return  # free pages cover the imminent decode growth
+        # decode-phase victims only: they hold a generated token the engine
+        # can re-seed its slot from on cancel, and their planned work this
+        # iteration is at most one decode token to rescind
+        cands = [r for r in self.running
+                 if r.request_id in self.tables
+                 and r.prefilled_len >= r.prompt_len and r.n_generated > 0
+                 and self._should_swap(r)]
+        if not cands:
+            return
+        victim = self._pick_from(cands, needed=max(1, self._growth_pages()))
+        self._rescind(plan, victim)
+        self._release_cache_path(victim)
+        table = self.tables[victim.request_id]
+        ticket, pairs = self.allocator.swap_out_issue(table)
+        if self.swap_issue_hook is not None:
+            self.swap_issue_hook(pairs)
+        victim.swaps += 1
+        victim.phase = Phase.WAITING
+        self.running.remove(victim)
+        self.waiting.insert(0, victim)
+        plan.swap_issue.append((victim, pairs))
+        self._pending_swaps.append((ticket, victim, pairs))
+        tr = self.trace
+        if tr is not None:
+            tr.begin("swap", "pending", victim.request_id,
+                     pages=len(pairs), speculative=True)
+            tr.instant("sched", "swap_issue", rid=victim.request_id,
+                       pages=len(pairs), kind="speculative")
+
+    def _resolve_pending_swaps(self, plan: IterationPlan) -> None:
+        """Complete or cancel every in-flight swap-out (issued last
+        iteration). Complete: the copy landed during the overlapped compute;
+        the ledger's device references drop and the victim stays parked as a
+        normal host-resident waiter. Cancel: a finish/eviction freed enough
+        pages meanwhile — the device references move back onto the table
+        and the victim resumes decode immediately, having lost nothing."""
+        pending, self._pending_swaps = self._pending_swaps, []
+        tr = self.trace
+        for ticket, req, pairs in pending:
+            if req.request_id not in self.tables:
+                # finished-while-pending / external cancel: free_table
+                # already released the host pages; just drop the ledger's
+                # device references (no copy — there is nowhere to copy to)
+                self.allocator.swap_out_complete(ticket)
+                if tr is not None:
+                    tr.end("swap", "pending", req.request_id,
+                           outcome="orphaned")
+                continue
+            table = self.tables[req.request_id]
+            # hysteresis: cancelling needs a watermark of slack past the
+            # growth that triggered the issue (a completion-scale event,
+            # not one stray freed page), or issue/cancel would flap at the
+            # exhaustion boundary every iteration
+            receded = self.allocator.num_free \
+                >= self._growth_pages() + self.watermark_blocks
+            if receded:
+                self.allocator.swap_out_cancel(ticket, table)
+                if self.swap_cancel_hook is not None:
+                    self.swap_cancel_hook(pairs)
+                self.waiting.remove(req)
+                req.phase = Phase.INCREMENT if \
+                    req.prefilled_len >= req.prompt_len else Phase.INITIATION
+                req.last_planned_iter = self._iter_idx
+                self.running.append(req)
+                plan.swap_cancel.append((req, pairs))
+                if tr is not None:
+                    tr.end("swap", "pending", req.request_id,
+                           outcome="cancel")
+                    tr.instant("sched", "swap_cancel", rid=req.request_id,
+                               pages=len(pairs))
+            else:
+                if self.swap_complete_hook is not None:
+                    # engine copies device->host NOW — the pending ledger
+                    # kept the source pages allocated across the overlap
+                    # window, so they still hold the victim's KV
+                    self.swap_complete_hook(pairs)
+                self.allocator.swap_out_complete(ticket)
+                # hold the victim out of readmission until pressure truly
+                # recedes — the pages this complete just freed must become
+                # decode headroom, not an immediate swap-in of the victim
+                # they were taken from (see _swap_hold in __init__)
+                self._swap_hold.add(req.request_id)
+                plan.swap_complete.append((req, pairs))
+                if tr is not None:
+                    tr.end("swap", "pending", req.request_id,
+                           outcome="complete")
+                    # the pages have now actually left the device: emit the
+                    # classic swap_out instant so the out/in balance
+                    # invariant (validate_swap_balance) sees this request
+                    # as host-resident from here on
+                    tr.instant("sched", "swap_out", rid=req.request_id,
+                               pages=len(pairs), trigger=req.request_id,
+                               kind="speculative")
 
     def _rescind(self, plan: IterationPlan, victim: Request) -> None:
         """Remove work already planned this iteration for a preemption
@@ -686,6 +876,19 @@ class IterationScheduler:
                 self.trace.instant("sched", "refuse", rid=req.request_id,
                                    why="swap_wait", needed=need, avail=avail)
             return False
+        if req.request_id in self._swap_hold:
+            # speculatively swapped out: only readmit once the pool holds
+            # its need PLUS a full watermark of slack, i.e. the pressure
+            # that justified the early swap-out has genuinely receded
+            # (typically a resident completed). Readmitting into a pool
+            # that barely fits would undo the eviction one iteration later.
+            if avail < need + self.watermark_blocks:
+                if self.trace is not None:
+                    self.trace.instant("sched", "refuse",
+                                       rid=req.request_id, why="swap_hold",
+                                       needed=need, avail=avail)
+                return False
+            self._swap_hold.discard(req.request_id)
         pairs = self.allocator.swap_in(table)
         if self.swap_in_hook is not None:
             # engine copies host->device; nothing reads the fresh blocks
@@ -714,6 +917,7 @@ class IterationScheduler:
         """Drop a host snapshot that can never be swapped back in and reset
         the request to recompute-from-scratch semantics (same bookkeeping
         as :meth:`_preempt`, but the request is already in ``waiting``)."""
+        self._swap_hold.discard(req.request_id)
         req.phase = Phase.PREEMPTED
         req.preemptions += 1
         req.prompt = (req.prompt + req.output) if req.prompt else req.prompt
@@ -875,24 +1079,69 @@ class IterationScheduler:
             self.running.remove(req)
         self.waiting.insert(0, req)
 
-    def _pick_victim(self, exclude: Request) -> Optional[Request]:
-        """Choose who loses their device pages, per ``victim_policy``."""
-        cands = [r for r in self.running
-                 if r is not exclude and r.request_id in self.tables]
-        if not cands:
-            return None
+    def _victim_cost(self, req: Request) -> float:
+        """Raw eviction bill of ``req`` in seconds. A victim that would
+        *swap* costs its PCIe round trip; one that would *sacrifice* costs
+        the quadratic recompute of its context. ``victim_cost_fn``
+        (sim/engine-wired) overrides the built-in mirror of the sim's
+        CostModel/NetworkModel defaults."""
+        table = self.tables[req.request_id]
+        if self.victim_cost_fn is not None:
+            return self.victim_cost_fn(req, table)
+        n = len(table.blocks)
+        ctx = min(req.prefilled_len, table.num_tokens) + req.n_generated
+        if self._should_swap(req):
+            from repro.core.distkv.netmodel import NetworkModel
+            return 2.0 * NetworkModel().swap_time(n)
+        # CostModel defaults: c_token * ctx + c_ctx * attention reads
+        return 12e-6 * ctx + 18e-9 * (ctx * (ctx - 1) // 2)
+
+    def _pick_from(self, cands: List[Request], needed: int = 1) -> Request:
+        """Rank non-empty ``cands`` per ``victim_policy``. ``needed`` is
+        the current page shortfall: the ``cost`` policy ranks by eviction
+        seconds per page freed *toward that shortfall* — a small decode
+        hole favors the victim with the cheapest absolute bill (evicting a
+        giant frees pages nobody asked for), while a bulk shortfall
+        amortizes a big victim's bill over everything it frees."""
+        if self.victim_policy == "cost":
+            return min(cands, key=lambda r: self._victim_cost(r) / max(
+                1, min(len(self.tables[r.request_id].blocks), needed)))
         if self.victim_policy == "fifo":
             return cands[0]
         if self.victim_policy == "lru":
             return min(cands, key=lambda r: r.last_planned_iter)
         return cands[-1]  # lifo: youngest, least sunk work (vLLM default)
 
+    def _pick_victim(self, exclude: Request,
+                     needed: int = 1) -> Optional[Request]:
+        """Choose who loses their device pages, per ``victim_policy``.
+
+        Under ``swap_mode="auto"`` swap-worthiness is evaluated PER
+        CANDIDATE before ranking: a candidate whose KV is worth moving
+        (cheap PCIe vs expensive recompute) beats one that would have to
+        sacrifice, whatever the positional order says — previously the
+        policy locked in a victim first and only then asked whether
+        swapping it was worthwhile, so auto could pick a must-recompute
+        victim while a cheap-to-swap one sat right next to it."""
+        cands = [r for r in self.running
+                 if r is not exclude and r.request_id in self.tables]
+        if not cands:
+            return None
+        if self.swap_mode == "auto":
+            worthy = [r for r in cands if self._should_swap(r)]
+            if worthy:
+                cands = worthy
+        return self._pick_from(cands, needed)
+
     def _evict_one(self, exclude: Request,
                    plan: IterationPlan) -> Optional[Request]:
         """Pick a victim, rescind its planned work, and take its device
         pages — by swap when the mode/decider says the KV is worth the PCIe
         round trip, by sacrifice (recompute) otherwise."""
-        victim = self._pick_victim(exclude)
+        table = self.tables.get(exclude.request_id)
+        needed = self.allocator.blocks_needed(table, 1) if table is not None \
+            else 1
+        victim = self._pick_victim(exclude, needed=max(1, needed))
         if victim is None:
             return None
         self._rescind(plan, victim)

@@ -181,15 +181,26 @@ def validate_trace_events(obj: object) -> List[str]:
     return errors
 
 
+_SWAP_OUTCOMES = ("complete", "cancel", "orphaned")
+
+
 def validate_swap_balance(obj: object) -> List[str]:
-    """Check the host-swap invariant on an exported trace.
+    """Check the host-swap invariants on an exported trace.
 
     Per request, ``sched.swap_out`` / ``sched.swap_in`` instants must
     alternate starting with an out: at any point in time a request is
     either device-resident (balance 0) or host-resident (balance 1).
     A trailing unmatched ``swap_out`` is legal — the request finished or
     was abandoned while swapped — so the final balance per rid may be 0
-    or 1, never more. Returns human-readable problems (empty ⇒ valid).
+    or 1, never more.
+
+    Overlapped (speculative) swap-outs add the ``swap.pending`` async
+    span: every issue (``b``) must resolve in exactly one matching ``e``
+    whose ``outcome`` is complete | cancel | orphaned — never two, never
+    none — and while a request's pages are mid-flight it must do no work:
+    no ``sched.admit``, ``sched.swap_in``, or prefill ``req.chunk`` may
+    land strictly inside the span. Returns human-readable problems
+    (empty ⇒ valid).
     """
     if isinstance(obj, dict):
         events = obj.get("traceEvents", [])
@@ -198,15 +209,49 @@ def validate_swap_balance(obj: object) -> List[str]:
     else:
         return ["trace must be a JSON object with 'traceEvents' or a list"]
     swaps = []
-    for e in events:
-        if not isinstance(e, dict) or e.get("cat") != "sched":
-            continue
-        name = e.get("name")
-        if name not in ("swap_out", "swap_in"):
-            continue
-        args = e.get("args") or {}
-        swaps.append((e.get("ts", 0.0), args.get("rid"), name))
+    pending_open: Dict[object, float] = {}
+    flights: Dict[object, List[tuple]] = {}  # rid -> [(issue_ts, end_ts)]
+    activity: List[tuple] = []  # (ts, rid, cat.name)
     errors: List[str] = []
+    for e in events:  # list order == emission order
+        if not isinstance(e, dict):
+            continue
+        cat, name, ph = e.get("cat"), e.get("name"), e.get("ph")
+        args = e.get("args") or {}
+        ts = e.get("ts", 0.0)
+        if cat == "sched" and name in ("swap_out", "swap_in"):
+            swaps.append((ts, args.get("rid"), name))
+        if (cat, name) in (("sched", "admit"), ("sched", "swap_in"),
+                           ("req", "chunk")):
+            activity.append((ts, args.get("rid"), f"{cat}.{name}"))
+        if cat == "swap" and name == "pending":
+            rid = e.get("id", args.get("rid"))
+            if ph == "b":
+                if rid in pending_open:
+                    errors.append(f"rid {rid}: swap issue at ts={ts} while "
+                                  f"a swap is already in flight")
+                else:
+                    pending_open[rid] = ts
+            elif ph == "e":
+                if rid not in pending_open:
+                    errors.append(f"rid {rid}: swap resolution at ts={ts} "
+                                  f"without an open issue")
+                else:
+                    flights.setdefault(rid, []).append(
+                        (pending_open.pop(rid), ts))
+                if args.get("outcome") not in _SWAP_OUTCOMES:
+                    errors.append(
+                        f"rid {rid}: swap resolution at ts={ts} has "
+                        f"outcome {args.get('outcome')!r} (must be one of "
+                        f"{'|'.join(_SWAP_OUTCOMES)})")
+    for rid, ts in sorted(pending_open.items(), key=lambda kv: str(kv[0])):
+        errors.append(f"rid {rid}: swap issued at ts={ts} never resolved")
+    # a request whose pages are mid-flight does no work
+    for ts, rid, what in activity:
+        for t0, t1 in flights.get(rid, ()):
+            if t0 < ts < t1:
+                errors.append(f"rid {rid}: {what} at ts={ts} while its "
+                              f"pages were in flight ({t0}..{t1})")
     balance: Dict[object, int] = {}
     for ts, rid, name in sorted(swaps, key=lambda s: s[0]):
         if rid is None:

@@ -35,9 +35,19 @@ Event vocabulary (``cat``/``name``; ``args`` carry cause attribution):
                       withdrawn from a preemption victim), ``first_token``
 ``sched``             scheduler decisions with *why*: ``admit`` (cached /
                       leased tokens, first chunk), ``refuse`` (``why`` in
-                      budget_sliver | no_pages | solo_wait), ``preempt``
-                      (victim + ``trigger`` request + ``kind``
-                      victim|self), ``cow_rescind``
+                      budget_sliver | no_pages | solo_wait | swap_wait |
+                      swap_hold), ``preempt`` (victim + ``trigger``
+                      request + ``kind`` victim|self), ``cow_rescind``,
+                      ``swap_out`` / ``swap_in`` (host-tier page moves;
+                      a speculative swap-out's instant fires when the
+                      transfer COMPLETES, ``kind=speculative``),
+                      ``swap_issue`` / ``swap_cancel`` (overlapped
+                      swap-out issued early / rescinded)
+``swap``              overlapped-transfer async span: ``pending`` begun
+                      at issue and ended at resolution with ``outcome``
+                      complete | cancel | orphaned — the device pages are
+                      DMA-in-flight for the whole span and the request
+                      does no work inside it (``validate_swap_balance``)
 ``lease``             zero-copy lease lifecycle: ``lend`` / ``borrow``
                       (rManager sides), ``acquire`` / ``release``
                       (scheduler holds), ``repay`` (creditor settled)

@@ -26,13 +26,23 @@ from repro.serving.api import LLMService, SamplingParams
 
 def build_netmodel(args):
     # no --net-gbps: network accounting stays off for copy AND zero_copy
-    # alike (an asymmetric default would bias their comparison); only
-    # share-mode auto forces a model, since its decision needs one
-    if args.net_gbps is None and args.share_mode != "auto":
+    # alike (an asymmetric default would bias their comparison); share-mode
+    # auto forces a model (its decision needs one), and so does explicit
+    # swap-lane calibration (--pcie-gbps / --t-swap-fixed must reach the
+    # backend's swap_net instead of silently using defaults)
+    calibrated = args.pcie_gbps is not None or args.t_swap_fixed is not None
+    if args.net_gbps is None and not calibrated \
+            and args.share_mode != "auto":
         return None
     from repro.core.distkv.netmodel import NetworkModel
-    return NetworkModel(gbps=args.net_gbps) if args.net_gbps is not None \
-        else NetworkModel()
+    kw = {}
+    if args.net_gbps is not None:
+        kw["gbps"] = args.net_gbps
+    if args.pcie_gbps is not None:
+        kw["pcie_gbps"] = args.pcie_gbps
+    if args.t_swap_fixed is not None:
+        kw["t_swap_fixed"] = args.t_swap_fixed
+    return NetworkModel(**kw)
 
 
 def build_instance(args):
@@ -46,6 +56,8 @@ def build_instance(args):
                           host_blocks=args.host_pages,
                           swap_mode=args.swap_mode,
                           victim_policy=args.victim_policy,
+                          swap_overlap=args.swap_overlap,
+                          speculative_swap=args.speculative_swap,
                           cache_spill_pages=args.cache_spill_pages,
                           net=build_netmodel(args), trace=telemetry)
     import jax
@@ -61,6 +73,7 @@ def build_instance(args):
         chunk_policy=args.chunk_policy, enable_telemetry=telemetry,
         host_pages=args.host_pages, swap_mode=args.swap_mode,
         victim_policy=args.victim_policy,
+        speculative_swap=args.speculative_swap,
         cache_spill_pages=args.cache_spill_pages))
 
 
@@ -154,7 +167,24 @@ def main():
                     choices=VICTIM_POLICIES,
                     help="which running request is preempted/swapped under "
                          "memory pressure: lifo (newest), fifo (oldest), "
-                         "or lru (least recently scheduled)")
+                         "lru (least recently scheduled), or cost (cheapest "
+                         "modeled eviction per freed page)")
+    ap.add_argument("--swap-overlap", action="store_true",
+                    help="sim backend: double-buffer PCIe swap DMAs against "
+                         "each iteration's compute (only the surplus past "
+                         "the compute time is charged)")
+    ap.add_argument("--speculative-swap", action="store_true",
+                    help="issue decode swap-outs one iteration early when "
+                         "free pages trend under the watermark, cancelling "
+                         "if pressure recedes (issue/complete halves over "
+                         "the allocator's pending ledger)")
+    ap.add_argument("--pcie-gbps", type=float, default=None,
+                    help="swap-lane calibration: PCIe bandwidth for the "
+                         "NetworkModel's device<->host swap time (default: "
+                         "the model's 256 Gb/s)")
+    ap.add_argument("--t-swap-fixed", type=float, default=None,
+                    help="swap-lane calibration: per-batched-DMA setup time "
+                         "in seconds (default: the model's 20us)")
     ap.add_argument("--cache-spill-pages", type=int, default=0,
                     help="host pages the prefix cache may use to spill "
                          "cold cached prefixes instead of evicting them "

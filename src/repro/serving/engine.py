@@ -119,12 +119,17 @@ class EngineConfig:
     # host swap tier: host-memory pages a preemption victim's KV can move
     # to (0 = disabled, classic sacrifice-and-recompute). With pages
     # available, swap_mode ("sacrifice" | "swap" | "auto") and
-    # victim_policy ("lifo" | "fifo" | "lru") pick who loses device pages
-    # and whether their KV survives on host — see
+    # victim_policy ("lifo" | "fifo" | "lru" | "cost") pick who loses
+    # device pages and whether their KV survives on host — see
     # core.scheduling.iteration.SWAP_MODES / VICTIM_POLICIES
     host_pages: int = 0
     swap_mode: str = "sacrifice"
     victim_policy: str = "lifo"
+    # speculative double-buffered swap-outs: the scheduler issues a decode
+    # victim's swap-out one iteration early when free pages trend under the
+    # watermark (issue/complete halves behind the allocator's pending
+    # ledger), cancelling if pressure recedes before the DMA resolves
+    speculative_swap: bool = False
     # prefix-cache spill: cold radix pages move to host pages (bounded LRU
     # budget, drawn from the same host_pages pool) instead of dying — a
     # later match restores them over PCIe instead of recomputing
@@ -163,7 +168,8 @@ class PagedEngine:
             prefix_cache=self.prefix_cache,
             max_preemptions=ecfg.max_preemptions,
             chunk_policy=ecfg.chunk_policy,
-            swap_mode=ecfg.swap_mode, victim_policy=ecfg.victim_policy)
+            swap_mode=ecfg.swap_mode, victim_policy=ecfg.victim_policy,
+            speculative_swap=ecfg.speculative_swap)
         # host swap tier: pinned-host-memory stand-ins (numpy arrays, same
         # page geometry as the device pools minus the trash page). The
         # scheduler's swap hooks move payloads synchronously at schedule
@@ -176,6 +182,12 @@ class PagedEngine:
             self.h_v_pages = np.zeros_like(self.h_k_pages)
             self.scheduler.swap_out_hook = self._swap_out_copy
             self.scheduler.swap_in_hook = self._swap_in_copy
+            # double-buffered (issue/complete) halves for speculative
+            # swap-outs: the allocator's pending ledger keeps the source
+            # pages allocated and immutable while "in flight"
+            self.scheduler.swap_issue_hook = self._swap_out_issue
+            self.scheduler.swap_complete_hook = self._swap_out_complete
+            self.scheduler.swap_cancel_hook = self._swap_out_cancel
             if self.prefix_cache is not None:
                 self.prefix_cache.spill_out_fn = self._spill_out_copy
                 self.prefix_cache.spill_in_fn = self._spill_in_copy
@@ -616,10 +628,12 @@ class PagedEngine:
         # swapped-in one claims a fresh slot and re-arms its input token
         # (the last sampled token, whose KV was never written — it resumes
         # decode exactly where the swap interrupted it)
-        for req, _pairs in plan.swap_out:
+        for req, _pairs in plan.swap_out + plan.swap_issue:
             if req.request_id in self.slots:
                 self.free_slots.append(self.slots.pop(req.request_id))
-        for req, _pairs in plan.swap_in:
+        # a cancelled speculative swap re-enters decode this iteration:
+        # its pages never left the device, so only the slot comes back
+        for req, _pairs in plan.swap_in + plan.swap_cancel:
             slot = self.free_slots.pop()
             self.slots[req.request_id] = slot
             if req.output:
@@ -754,14 +768,18 @@ class PagedEngine:
             m.gauge("net_time_s", self.net_time)
             if self.allocator.num_host_blocks:
                 m.gauge("swapped_pages", self.allocator.swapped_pages)
+                m.gauge("swap_pending_pages",
+                        self.allocator.pending_out_pages)
             if self.prefix_cache is not None:
                 m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
             m.count("tokens", plan.token_count())
             m.count("decode_tokens", len(plan.decode))
             m.count("prefill_tokens", sum(c.length for c in plan.chunks))
             m.count("preemptions", len(plan.preempted))
-            m.count("swap_outs", len(plan.swap_out))
+            m.count("swap_outs", len(plan.swap_out) + len(plan.swap_complete))
             m.count("swap_ins", len(plan.swap_in))
+            m.count("swap_issues", len(plan.swap_issue))
+            m.count("swap_cancels", len(plan.swap_cancel))
             m.observe("iteration_time_s", dur)
             m.snapshot(now, self.iterations)
         self.iterations += 1
@@ -803,6 +821,25 @@ class PagedEngine:
         self.h_k_pages[:, hosts] = np.asarray(self.k_pages[:, devs])
         self.h_v_pages[:, hosts] = np.asarray(self.v_pages[:, devs])
         self.swapped_out += 1
+
+    def _swap_out_issue(self, pairs) -> None:
+        """Issue half of a double-buffered swap-out: the DMA is in flight
+        against the next iteration's compute. The source device pages stay
+        allocated through the allocator's pending ledger and are never
+        written while pending, so the payload copy is deferred to the
+        complete half — byte-identical to copying now, with nothing
+        serialized into this iteration."""
+
+    def _swap_out_complete(self, pairs) -> None:
+        """Complete half: materialize the device->host payloads (sources
+        untouched since issue), called by the scheduler *before* the
+        allocator decrefs the device pages."""
+        self._swap_out_copy(pairs)
+
+    def _swap_out_cancel(self, pairs) -> None:
+        """Pressure receded before the transfer resolved: the pages never
+        left the device, nothing to copy (host blocks are returned by the
+        allocator's cancel path)."""
 
     def _swap_in_copy(self, pairs) -> None:
         """Host -> device onto the freshly allocated blocks (batched: one

@@ -210,7 +210,8 @@ class RouterBackend:
                  roles: Optional[Union[str, Sequence[str]]] = None,
                  handoff_mode: str = "auto",
                  handoff_defer_cap: int = 8,
-                 promote_after: Optional[int] = None):
+                 promote_after: Optional[int] = None,
+                 peer_spill: bool = False):
         if not children:
             raise ValueError("RouterBackend needs at least one child backend")
         if share_mode not in SHARE_MODES:
@@ -252,6 +253,7 @@ class RouterBackend:
         # costs nothing on virtual clocks)
         self.net = net or (NetworkModel()
                            if share_mode == "auto" or self.disaggregated
+                           or peer_spill
                            else None)
         self.hot_threshold = hot_threshold
         # board_pages: size cap for the publication board (LRU page
@@ -290,6 +292,22 @@ class RouterBackend:
                     child.scheduler.prefix_importer = self._make_importer(i)
             if share_mode != "copy":
                 self._wire_zero_copy()
+        # peer KV spill tier: a child's radix cache parks cold pages in a
+        # neighbor's free device memory (lent rBlocks, NVLink lane) before
+        # falling back to its host tier
+        self.peer_spill = peer_spill
+        if peer_spill:
+            for i, child in enumerate(self.children):
+                if getattr(child, "prefix_cache", None) is None:
+                    raise ValueError(
+                        f"peer_spill needs a prefix cache on every child; "
+                        f"instance {i} has none")
+                if not child.prefix_cache.spill_budget:
+                    raise ValueError(
+                        f"peer_spill needs cache_spill_pages > 0 on every "
+                        f"child (the budget bounds peer+host spilled pages);"
+                        f" instance {i} has 0")
+            self._wire_peer_spill()
         # disaggregated prefill/decode: park prefill-only schedulers in
         # prefill_only mode and stand up the KV handoff coordinator
         self.handoff = None
@@ -385,6 +403,81 @@ class RouterBackend:
     def _read_pools(self, home: int):
         c = self.children[home]
         return c.k_pages, c.v_pages
+
+    def _wire_peer_spill(self) -> None:
+        """Attach the radix peer-spill hooks on every child: spill-out
+        lends one block from the neighbor with the most free device memory
+        (``RManager.try_lend``, debt in the gManager ledger) and ships the
+        payload over the NVLink lane; restore copies it back onto a fresh
+        local block and repays the loan. Payload copies are getattr-guarded
+        so cost-model sims ride the same wiring bookkeeping-only."""
+        self._wire_rmanagers()
+        for i, child in enumerate(self.children):
+            pc = child.prefix_cache
+            pc.peer_spill_fn = self._make_peer_spiller(i)
+            pc.peer_restore_fn = self._make_peer_restorer(i)
+            pc.peer_drop_fn = self._make_peer_dropper(i)
+
+    def _charge_peer_copy(self, i: int, n_pages: int) -> None:
+        if self.net is None:
+            return
+        charge = getattr(self.children[i], "charge_network", None)
+        if charge is not None:
+            charge(self.net.peer_copy_time(n_pages))
+
+    def _make_peer_spiller(self, i: int):
+        child = self.children[i]
+        child_is_engine = hasattr(child, "k_pages")
+
+        def spill(dev_block: int):
+            # neighbor with the most free device pages (same backend kind:
+            # a payload cannot move between a cost-model sim and an engine)
+            best, best_free = None, -1
+            for j, peer in enumerate(self.children):
+                if j == i or hasattr(peer, "k_pages") != child_is_engine:
+                    continue
+                free = peer.allocator.num_free
+                if free > self.g.safety_free and free > best_free:
+                    best, best_free = j, free
+            if best is None:
+                return None
+            blk = self.rms[best].try_lend(debtor=i)
+            if blk is None:
+                return None
+            if child_is_engine:
+                # copy while the source device page is still allocated
+                self.children[best].import_page_payloads(
+                    [blk], [child.export_page_payload(dev_block)])
+            self._charge_peer_copy(i, 1)
+            if self.trace is not None:
+                self.trace.instant("net", "peer_spill", src=i, home=best,
+                                   pages=1)
+            return best, blk
+
+        return spill
+
+    def _make_peer_restorer(self, i: int):
+        child = self.children[i]
+
+        def restore(home: int, peer_block: int, dev_block: int) -> None:
+            exp = getattr(self.children[home], "export_page_payload", None)
+            write = getattr(child, "import_page_payloads", None)
+            if exp is not None and write is not None:
+                write([dev_block], [exp(peer_block)])
+            self.rms[i].repay(home, peer_block)
+            self._charge_peer_copy(i, 1)
+            if self.trace is not None:
+                self.trace.instant("net", "peer_restore", dst=i, home=home,
+                                   pages=1)
+
+        return restore
+
+    def _make_peer_dropper(self, i: int):
+        def drop(home: int, peer_block: int) -> None:
+            # the spilled copy dies unread: repay the loan, no payload moves
+            self.rms[i].repay(home, peer_block)
+
+        return drop
 
     # -- distkv wiring ---------------------------------------------------------
 
@@ -761,6 +854,9 @@ class RouterBackend:
                 row["prefix_hit_rate"] = pc.hit_rate
                 row["cached_pages"] = pc.num_pages
                 row["adopted_pages"] = pc.adopted_pages
+                if self.peer_spill:
+                    row["peer_spilled_pages"] = pc.peer_spilled_pages
+                    row["peer_restored_pages"] = pc.peer_restored_pages
             if self.share_mode != "copy":
                 # outstanding rBlock debt from the gManager ledger
                 row["lent_pages"] = self.g.lent_by(i)

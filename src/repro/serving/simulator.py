@@ -87,6 +87,9 @@ class SimResult:
     swapped_out: int = 0
     swapped_in: int = 0
     swap_time: float = 0.0
+    # speculative swap-outs cancelled because pressure receded (the pages
+    # never left the device)
+    swap_cancels: int = 0
     # disaggregated runs: prefill->decode KV handoffs by path, and the
     # per-role metric timelines (role -> time-ordered rows)
     handoffs_migrated: int = 0
@@ -284,6 +287,8 @@ class SimBackend:
                  host_blocks: int = 0,
                  swap_mode: str = "sacrifice",
                  victim_policy: str = "lifo",
+                 swap_overlap: bool = False,
+                 speculative_swap: bool = False,
                  cache_spill_pages: int = 0,
                  cost: Optional[CostModel] = None,
                  net: Optional[NetworkModel] = None,
@@ -303,6 +308,11 @@ class SimBackend:
         self.swap_time_s = 0.0
         self.swapped_out = 0
         self.swapped_in = 0
+        # overlap window: PCIe transfers hide behind the iteration's compute
+        # (double-buffered DMA); only the surplus past the compute time is
+        # charged on the virtual clock. Off = PR 8's serial model.
+        self.swap_overlap = swap_overlap
+        self.swap_cancels = 0
         self.allocator = BlockAllocator(num_blocks, block_size,
                                         host_blocks=host_blocks)
         self.prefix_cache = PrefixCache(
@@ -321,7 +331,12 @@ class SimBackend:
             # the PCIe round trip (out now + in later) undercuts recomputing
             # the victim's context from scratch
             swap_decider=self._swap_worth_it if swap_mode == "auto"
-            else None)
+            else None,
+            # victim_policy="cost" ranks candidates by this (eviction cost
+            # per freed page) instead of queue position — only consulted by
+            # the scheduler for the cost policy
+            victim_cost_fn=self._victim_cost,
+            speculative_swap=speculative_swap)
         self._now = 0.0
         self.iterations = 0
         self.preemptions = 0
@@ -347,6 +362,19 @@ class SimBackend:
         recompute = self.cost.c_token * ctx + \
             self.cost.c_ctx * self.cost.prefill_read_tokens(0, ctx)
         return 2.0 * self.swap_net.swap_time(n_pages) < recompute
+
+    def _victim_cost(self, req: Request, table) -> float:
+        """victim_policy="cost" raw eviction bill: the modeled cost of
+        evicting this request — PCIe round trip when its KV is worth
+        swapping, quadratic recompute time otherwise. The scheduler
+        normalizes by the pages freed toward the current shortfall and
+        the cheapest seconds-per-needed-page victim wins."""
+        n = len(table.blocks)
+        ctx = min(req.prefilled_len, table.num_tokens) + req.n_generated
+        if self._swap_worth_it(req, n):
+            return 2.0 * self.swap_net.swap_time(n)
+        return self.cost.c_token * ctx + \
+            self.cost.c_ctx * self.cost.prefill_read_tokens(0, ctx)
 
     # -- ServingBackend protocol ----------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -377,19 +405,23 @@ class SimBackend:
             tr.iteration = self.iterations
         plan = self.scheduler.schedule()
         self.preemptions += len(plan.preempted)
-        if plan.swap_out or plan.swap_in:
-            # charge the PCIe lane on the virtual clock, one batched DMA
-            # per direction per iteration (transfers serialize with compute
-            # here — a conservative model; real engines overlap them)
-            t_swap = self.swap_net.swap_time(
-                sum(len(p) for _, p in plan.swap_out)) + \
-                self.swap_net.swap_time(
-                    sum(len(p) for _, p in plan.swap_in))
-            self._now += t_swap
+        # PCIe traffic this iteration: demand swap-outs, speculative issues
+        # (the DMA starts now, regardless of how it later resolves), and
+        # swap-ins. Completions/cancels were charged at their issue.
+        out_pages = sum(len(p) for _, p in plan.swap_out) + \
+            sum(len(p) for _, p in plan.swap_issue)
+        in_pages = sum(len(p) for _, p in plan.swap_in)
+        t_swap = 0.0
+        if out_pages or in_pages:
+            t_swap = self.swap_net.swap_time(out_pages) + \
+                self.swap_net.swap_time(in_pages)
             self.swap_time_s += t_swap
-            self.swapped_out += len(plan.swap_out)
-            self.swapped_in += len(plan.swap_in)
+        self.swapped_out += len(plan.swap_out) + len(plan.swap_complete)
+        self.swapped_in += len(plan.swap_in)
+        self.swap_cancels += len(plan.swap_cancel)
         if plan.empty:
+            # no compute to hide behind — the PCIe time is fully exposed
+            self._now += t_swap
             # nothing computed, but a preemption may still have happened
             # (a lone request outgrowing the whole pool preempts *itself*,
             # leaving an empty plan) — complete_iteration must still run so
@@ -418,8 +450,15 @@ class SimBackend:
             sum_remote += c.length * rb
             n_borrowing += 1 if rb else 0
         t_start = self._now
-        self._now += self.cost.iteration_time(plan.token_count(), sum_ctx,
-                                              sum_remote)
+        t_iter = self.cost.iteration_time(plan.token_count(), sum_ctx,
+                                          sum_remote)
+        # one batched DMA per direction per iteration. Serial (PR 8's
+        # conservative model): transfers stack on top of compute. Overlap:
+        # double-buffered against this iteration's compute, only the
+        # surplus past t_iter is exposed on the clock.
+        t_exposed = max(0.0, t_swap - t_iter) if self.swap_overlap \
+            else t_swap
+        self._now += t_iter + t_exposed
         if self.net is not None and n_borrowing:
             t_net = self.net.borrow_iter_overhead(n_borrowing)
             self._now += t_net
@@ -458,14 +497,18 @@ class SimBackend:
             if self.allocator.num_host_blocks:
                 m.gauge("swapped_pages", self.allocator.swapped_pages)
                 m.gauge("swap_time_s", self.swap_time_s)
+                m.gauge("swap_pending_pages",
+                        self.allocator.pending_out_pages)
             if self.prefix_cache is not None:
                 m.gauge("prefix_hit_rate", self.prefix_cache.hit_rate)
             m.count("tokens", plan.token_count())
             m.count("decode_tokens", len(plan.decode))
             m.count("prefill_tokens", sum(c.length for c in plan.chunks))
             m.count("preemptions", len(plan.preempted))
-            m.count("swap_outs", len(plan.swap_out))
+            m.count("swap_outs", len(plan.swap_out) + len(plan.swap_complete))
             m.count("swap_ins", len(plan.swap_in))
+            m.count("swap_issues", len(plan.swap_issue))
+            m.count("swap_cancels", len(plan.swap_cancel))
             m.observe("iteration_time_s", self._now - t_start)
             m.snapshot(self._now, self.iterations)
         self.iterations += 1
@@ -491,6 +534,8 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                    host_blocks: int = 0,
                    swap_mode: str = "sacrifice",
                    victim_policy: str = "lifo",
+                   swap_overlap: bool = False,
+                   speculative_swap: bool = False,
                    cost: Optional[CostModel] = None,
                    net: Optional[NetworkModel] = None,
                    trace: bool = False) -> SimResult:
@@ -506,7 +551,12 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
     ``host_blocks`` / ``swap_mode`` / ``victim_policy``: host swap tier —
     preemption victims' KV moves to host pages over a modeled PCIe lane
     (``net.pcie_gbps``) instead of being recomputed; see SWAP_MODES /
-    VICTIM_POLICIES in the scheduler module."""
+    VICTIM_POLICIES in the scheduler module.
+    ``swap_overlap``: double-buffer the PCIe DMAs against each iteration's
+    compute (only the surplus past the compute time hits the clock).
+    ``speculative_swap``: the scheduler issues decode swap-outs *early*
+    when free pages trend under the watermark, cancelling if pressure
+    recedes before the transfer resolves."""
     from repro.serving.api import LLMService  # late: api imports Request
 
     backend = SimBackend(num_blocks=num_blocks, block_size=block_size,
@@ -516,6 +566,8 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                          max_preemptions=max_preemptions,
                          host_blocks=host_blocks, swap_mode=swap_mode,
                          victim_policy=victim_policy,
+                         swap_overlap=swap_overlap,
+                         speculative_swap=speculative_swap,
                          chunk_policy=chunk_policy, cost=cost, net=net,
                          trace=trace)
     svc = LLMService(backend)
@@ -528,7 +580,8 @@ def simulate_paged(requests: Sequence[Request], *, num_blocks: int = 7000,
                     preemptions=backend.preemptions,
                     swapped_out=backend.swapped_out,
                     swapped_in=backend.swapped_in,
-                    swap_time=backend.swap_time_s)
+                    swap_time=backend.swap_time_s,
+                    swap_cancels=backend.swap_cancels)
     if backend.prefix_cache is not None:
         res.prefix_hit_rate = backend.prefix_cache.hit_rate
         res.cached_pages = backend.prefix_cache.num_pages
@@ -545,6 +598,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                     share_mode: str = "copy",
                     hot_threshold: int = 1,
                     board_pages: Optional[int] = None,
+                    peer_spill: bool = False,
+                    cache_spill_pages: int = 0,
                     blocks_per_instance: int = 1800, block_size: int = 16,
                     max_running: int = 64,
                     max_tokens_per_iter: int = 8192,
@@ -575,6 +630,7 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                            max_tokens_per_iter=max_tokens_per_iter,
                            prefix_cache=prefix_cache,
                            max_preemptions=max_preemptions,
+                           cache_spill_pages=cache_spill_pages,
                            chunk_policy=chunk_policy, cost=cost, net=net,
                            trace=trace)
                 for _ in range(n_instances)]
@@ -582,7 +638,8 @@ def simulate_router(requests: Sequence[Request], *, n_instances: int = 4,
                            prefix_share=prefix_share,
                            share_mode=share_mode,
                            hot_threshold=hot_threshold,
-                           board_pages=board_pages, net=net)
+                           board_pages=board_pages, net=net,
+                           peer_spill=peer_spill)
     svc = LLMService(router)
     for r in sorted(requests, key=lambda r: r.arrival_time):
         svc.submit_request(r)

@@ -9,7 +9,15 @@ snapshots that can never fit again, the preempted-victim prefix-credit fix
 (suffix-only recompute — satellite 2), radix spill-to-host, the sim page-
 conservation property (hypothesis), engine swap round-trip token identity
 vs the fp32 oracle, and the KVHandoff deferral-starvation fallback
-(satellite 1)."""
+(satellite 1).
+
+The overlapped-transfer tier adds: the allocator pending ledger
+(issue/complete/cancel), speculative swap-out cancellation when pressure
+recedes (the pages never leave), cost-vs-lru victim divergence where cost
+wins on sim throughput, the conservation property extended across random
+overlap/speculation settings, engine overlapped round-trip token identity,
+the peer KV spill tier (lend/restore/repay over rBlocks, sim and engine),
+and the ``validate_swap_balance`` pending-span invariants."""
 
 import dataclasses
 
@@ -130,6 +138,68 @@ def test_allocator_swap_in_raises_untouched_when_device_full():
     assert a.num_free == 4 and a.host_num_free == 8
 
 
+# -- allocator: overlapped swap-out (pending ledger) ---------------------------
+
+def test_allocator_issue_complete_matches_synchronous_swap():
+    """swap_out_issue keeps the DMA source pages ALLOCATED (num_free
+    unchanged) while the table is host-resident immediately; complete
+    lands the ledger in exactly the synchronous swap_out end state."""
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 3 * PS)
+    ticket, pairs = a.swap_out_issue(t)
+    assert len(pairs) == 3 and t.on_host
+    assert not t.blocks and len(t.host_blocks) == 3
+    assert a.num_free == 5, "DMA sources stay allocated until complete"
+    assert a.pending_out_pages == 3
+    assert a.host_num_free == 5, "host destinations are taken at issue"
+    done = a.swap_out_complete(ticket)
+    assert done == pairs
+    assert a.num_free == 8 and a.pending_out_pages == 0
+    assert a.swapped_pages == 3 and a.host_num_free == 5
+    a.swap_in(t)  # the overlapped snapshot swaps back like any other
+    a.free_table(t)
+    assert a.num_free == 8 and a.host_num_free == 8
+
+
+def test_allocator_issue_cancel_restores_table():
+    """Cancel aborts the copy: device references move back onto the table
+    (the pages never left — no payload was lost) and the host pages are
+    released; the ledger shows no trace of the round trip."""
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 3 * PS)
+    dev_before = list(t.blocks)
+    ticket, pairs = a.swap_out_issue(t)
+    back = a.swap_out_cancel(ticket, t)
+    assert back == pairs
+    assert t.blocks == dev_before and not t.on_host and not t.host_blocks
+    assert a.pending_out_pages == 0 and a.host_num_free == 8
+    assert a.num_free == 5, "the table still owns its device pages"
+    a.free_table(t)
+    assert a.num_free == 8
+
+
+def test_allocator_issue_guards_and_shared_pages():
+    a = BlockAllocator(8, PS, host_blocks=2)
+    t = _table_of(a, 3 * PS)
+    with pytest.raises(OutOfHostBlocks):
+        a.swap_out_issue(t)  # 3 pages cannot fit in 2 host blocks
+    assert a.pending_out_pages == 0 and not t.on_host
+    a.free_table(t)
+
+    a = BlockAllocator(8, PS, host_blocks=8)
+    t = _table_of(a, 2 * PS)
+    shared = t.blocks[0]
+    a.incref(shared)  # the radix tree's hold
+    ticket, _ = a.swap_out_issue(t)
+    with pytest.raises(ValueError):
+        a.swap_out_issue(t)  # already host-resident
+    a.swap_out_complete(ticket)
+    assert a.refcount_of(shared) == 1, "tree-shared page survives complete"
+    a.decref(shared)
+    a.free_table(t)
+    assert a.num_free == 8 and a.swapped_pages == 0
+
+
 # -- scheduler: swap as a preemption mode --------------------------------------
 
 def _crunch_scheduler(**kw):
@@ -224,8 +294,10 @@ def test_victim_policy_picks_the_right_loser(policy):
     reqs[2].last_planned_iter = 5
     victim = s._pick_victim(exclude=reqs[0])
     # candidates exclude the grower: lifo takes the newest, fifo the
-    # oldest remaining, lru the least recently scheduled
-    want = {"lifo": reqs[2], "fifo": reqs[1], "lru": reqs[1]}[policy]
+    # oldest remaining, lru the least recently scheduled; cost sees three
+    # identical one-page swap bills and the tie keeps the oldest remaining
+    want = {"lifo": reqs[2], "fifo": reqs[1], "lru": reqs[1],
+            "cost": reqs[1]}[policy]
     assert victim is want
 
 
@@ -273,6 +345,65 @@ def test_swap_auto_uses_decider():
     assert decisions, "the crunch must have consulted the decider"
     assert A.swaps == B.swaps == 0
     assert A.preemptions + B.preemptions >= 1
+
+
+def test_speculative_swap_cancel_pages_never_leave():
+    """A speculative swap-out issued under decode pressure is CANCELLED
+    when pressure recedes before the next iteration (here: the other
+    decoder finishes): the victim resumes decode with its original device
+    pages, the device->host copy hook never fires, and nothing remains in
+    the pending or host ledgers."""
+    a = BlockAllocator(8, PS, host_blocks=16)
+    s = IterationScheduler(a, max_tokens_per_iter=64, swap_mode="swap",
+                           speculative_swap=True)
+    issued, completed, cancelled = [], [], []
+    s.swap_issue_hook = issued.append
+    s.swap_complete_hook = completed.append
+    s.swap_cancel_hook = cancelled.append
+    A = Request(0, 0.0, list(range(17)), max_new_tokens=40)
+    B = Request(1, 0.0, list(range(100, 117)), max_new_tokens=40)
+    s.add_request(A)
+    s.add_request(B)
+    plan, it = None, 0.0
+    for _ in range(200):
+        plan = s.schedule()
+        if plan.swap_issue:
+            break
+        for r in plan.prefill + plan.decode:
+            r.output.append(0)
+        s.complete_iteration(plan, it)
+        it += 1.0
+    assert plan.swap_issue, "the crunch must trigger a speculative issue"
+    victim, pairs = plan.swap_issue[0]
+    survivor = A if victim is B else B
+    assert issued == [pairs]
+    assert victim.phase == Phase.WAITING and victim in s.waiting
+    assert a.pending_out_pages == len(pairs) > 0
+    assert s.tables[victim.request_id].on_host
+    # run the overlapped iteration; the survivor finishes, freeing its
+    # pages — pressure recedes past the cancel hysteresis band
+    for r in plan.prefill + plan.decode:
+        r.output.append(0)
+    survivor.max_new_tokens = survivor.n_generated
+    s.complete_iteration(plan, it)
+    plan2 = s.schedule()
+    assert plan2.swap_cancel == [(victim, pairs)]
+    assert cancelled == [pairs] and not completed, \
+        "the device->host copy must never have happened"
+    assert victim.phase == Phase.INCREMENT and victim in s.running
+    table = s.tables[victim.request_id]
+    assert not table.on_host and not table.host_blocks
+    assert all(dev in table.blocks for dev, _ in pairs), \
+        "the ledger's device references are back on the table"
+    assert a.pending_out_pages == 0 and a.swapped_pages == 0
+    # the victim then drains normally with no further swap traffic
+    for r in plan2.prefill + plan2.decode:
+        r.output.append(0)
+    s.complete_iteration(plan2, it + 1.0)
+    _drive(s)
+    assert victim.phase == Phase.FINISHED and victim.swaps == 1
+    assert not completed and len(issued) == 1
+    assert a.num_free == a.num_blocks and a.swapped_pages == 0
 
 
 # -- satellite 2: preempted victims keep their prefix-cache credit -------------
@@ -324,17 +455,13 @@ def test_mid_prefill_victim_banks_completed_chunks():
 
 # -- sim: conservation property + crossover plumbing ---------------------------
 
-@settings(max_examples=10, deadline=None)
-@given(num_blocks=st.integers(16, 48), host_blocks=st.integers(8, 64),
-       seed=st.integers(0, 10_000))
-def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
-                                               seed):
-    """Property: the device ledger (used + free == total) and the host
-    ledger (swapped + free == total) hold after EVERY sim iteration, for
-    any pressure pattern the workload generates."""
+def _check_conservation(num_blocks, host_blocks, seed, swap_overlap,
+                        speculative_swap):
     backend = SimBackend(num_blocks=num_blocks, block_size=PS,
                          max_running=8, max_tokens_per_iter=128,
-                         host_blocks=host_blocks, swap_mode="swap")
+                         host_blocks=host_blocks, swap_mode="swap",
+                         swap_overlap=swap_overlap,
+                         speculative_swap=speculative_swap)
     for r in make_workload(12, rate=200.0, dist="alpaca", seed=seed,
                            max_len=num_blocks * PS // 2):
         backend.add_request(r)
@@ -344,6 +471,8 @@ def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
             break
         backend.step()
         assert a.num_used + a.num_free == a.num_blocks
+        assert 0 <= a.pending_out_pages <= a.num_used, \
+            "in-flight DMA sources are allocated device pages"
         assert a.swapped_pages + a.host_num_free == a.num_host_blocks
         assert a.swapped_pages == sum(
             len(t.host_blocks) for t in backend.scheduler.tables.values())
@@ -351,6 +480,32 @@ def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
         raise AssertionError("sim did not drain")
     assert a.num_used == 0 and a.swapped_pages == 0, \
         "both ledgers drain to empty at teardown"
+    assert a.pending_out_pages == 0, "no swap-out may stay in flight"
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_blocks=st.integers(16, 48), host_blocks=st.integers(8, 64),
+       seed=st.integers(0, 10_000), swap_overlap=st.booleans(),
+       speculative_swap=st.booleans())
+def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
+                                               seed, swap_overlap,
+                                               speculative_swap):
+    """Property: the device ledger (used + free == total, in-flight pages
+    counted used) and the host ledger (swapped + free == total) hold after
+    EVERY sim iteration, for any pressure pattern the workload generates
+    and any overlap/speculation setting."""
+    _check_conservation(num_blocks, host_blocks, seed, swap_overlap,
+                        speculative_swap)
+
+
+@pytest.mark.parametrize("swap_overlap,speculative_swap",
+                         [(False, False), (True, False), (True, True)])
+def test_sim_page_conservation_examples(swap_overlap, speculative_swap):
+    """Example-based companion to the property above so the invariants
+    (including the overlapped/speculative paths) are exercised even where
+    hypothesis is unavailable."""
+    for seed in (7, 1234):
+        _check_conservation(24, 16, seed, swap_overlap, speculative_swap)
 
 
 def test_sim_swap_counters_and_result_fields():
@@ -363,6 +518,27 @@ def test_sim_swap_counters_and_result_fields():
     assert res.swapped_out == res.swapped_in > 0
     assert res.swap_time > 0.0, "PCIe time must be on the virtual clock"
     assert res.preemptions == 0
+
+
+def test_cost_victims_beat_lru_on_heterogeneous_crunch():
+    """Satellite 1 regression: under swap pressure with mixed 3072/512-
+    token contexts, lru ranks by staleness and keeps evicting big tables
+    (more PCIe round trips) while cost picks the cheapest eviction bill
+    for the actual shortfall — DIFFERENT victims, fewer swapped pages,
+    and strictly better sim throughput AND tail latency."""
+    def run(policy):
+        reqs = [Request(request_id=i, arrival_time=i * 0.02, prompt=[],
+                        prompt_len=3072 if i % 4 == 0 else 512,
+                        max_new_tokens=256) for i in range(16)]
+        return simulate_paged(reqs, num_blocks=280, block_size=16,
+                              max_tokens_per_iter=2048, host_blocks=2048,
+                              swap_mode="swap", victim_policy=policy)
+    lru, cost = run("lru"), run("cost")
+    assert lru.completed_frac == cost.completed_frac == 1.0
+    assert cost.swapped_out < lru.swapped_out, \
+        "the policies must pick different victims in this crunch"
+    assert cost.throughput_tokens_per_s > lru.throughput_tokens_per_s
+    assert cost.p99_normalized_latency < lru.p99_normalized_latency
 
 
 def test_sim_swap_rejects_bad_mode():
@@ -422,6 +598,79 @@ def test_prefix_cache_probe_counts_spilled_as_hit():
     path = cache.match(prompt, probe=True)
     assert len(path) == 1, "a probe must count spilled pages as cached"
     assert a.swapped_pages == 1, "a probe must not restore"
+
+
+# -- peer KV spill tier: cold pages parked in a neighbor's free memory ---------
+
+def _peer_children(**kw):
+    kw.setdefault("num_blocks", 16)
+    kw.setdefault("block_size", PS)
+    kw.setdefault("max_running", 4)
+    kw.setdefault("max_tokens_per_iter", 128)
+    kw.setdefault("host_blocks", 8)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("cache_spill_pages", 4)
+    return [SimBackend(**kw) for _ in range(2)]
+
+
+def test_peer_spill_lends_restores_and_repays():
+    """The peer tier is tried BEFORE host: a cold leaf page moves into the
+    neighbor's free device memory over an rBlock loan (debt in the
+    gManager ledger), a later prefix hit restores it home and repays, and
+    clear() drains both allocators and the ledger to empty."""
+    from repro.serving.router import RouterBackend
+    children = _peer_children()
+    router = RouterBackend(children, prefix_share=True, peer_spill=True)
+    pc = children[0].prefix_cache
+    a0, a1 = children[0].allocator, children[1].allocator
+    prompt = list(range(2 * PS))
+    t = _table_of(a0, 2 * PS)
+    pc.insert(prompt, t.blocks)
+    a0.free_table(t)
+    used1 = a1.num_used
+    pc.evict(1)  # the leaf page is the spill candidate
+    assert pc.spilled_pages == 1 and pc.peer_spilled_pages == 1
+    assert a0.swapped_pages == 0, "peer tier must be preferred over host"
+    assert router.g.lent_by(1) == 1, "instance 1 lent one rBlock"
+    assert a1.num_used == used1 + 1, "the parked copy lives on the peer"
+    path = pc.match(prompt)
+    assert len(path) == 2, "a peer-spilled prefix still serves hits"
+    assert pc.peer_restored_pages == 1
+    assert router.g.lent_by(1) == 0, "the loan is repaid on restore"
+    assert a1.num_used == used1
+    pc.clear()
+    assert a0.num_used == 0 and a1.num_used == 0
+    assert a0.swapped_pages == 0 and router.g.lent_by(1) == 0
+
+
+def test_peer_spill_drop_repays_without_restore():
+    """A peer-parked page evicted outright (spill budget churn / clear)
+    repays the loan without moving any payload — the ledger must not leak
+    debt for copies that die unread."""
+    from repro.serving.router import RouterBackend
+    children = _peer_children()
+    router = RouterBackend(children, prefix_share=True, peer_spill=True)
+    pc = children[0].prefix_cache
+    a1 = children[1].allocator
+    t = _table_of(children[0].allocator, PS)
+    pc.insert(list(range(PS)), t.blocks)
+    children[0].allocator.free_table(t)
+    pc.evict(1)
+    assert pc.peer_spilled_pages == 1 and router.g.lent_by(1) == 1
+    pc.clear()  # dies unread: no restore, loan still settled
+    assert pc.peer_restored_pages == 0
+    assert router.g.lent_by(1) == 0 and a1.num_used == 0
+
+
+def test_peer_spill_requires_spill_capable_children():
+    from repro.serving.router import RouterBackend
+    with pytest.raises(ValueError, match="prefix cache"):
+        RouterBackend([SimBackend(num_blocks=16, block_size=PS)
+                       for _ in range(2)],
+                      prefix_share=True, peer_spill=True)
+    with pytest.raises(ValueError, match="cache_spill_pages"):
+        RouterBackend(_peer_children(cache_spill_pages=0),
+                      prefix_share=True, peer_spill=True)
 
 
 # -- engine: swap round trip is token-identical --------------------------------
@@ -490,6 +739,155 @@ def test_engine_swap_round_trip_token_identity(model_setup_f32):
         assert r.full_output == want, f"req {r.request_id}"
     assert eng.allocator.num_free == eng.allocator.num_blocks
     assert eng.allocator.swapped_pages == 0
+
+
+def test_engine_overlapped_swap_token_identity(model_setup_f32):
+    """ACCEPTANCE (overlapped transfers): with speculative double-buffered
+    swap-outs the crunch issues device->host copies EARLY, every issue
+    resolves to exactly one complete or cancel, and the greedy tokens
+    still match the sequential fp32 oracle — overlap changes when the
+    copy happens, never what the KV contains."""
+    cfg, model, params = model_setup_f32
+    eng = PagedEngine(cfg, params, EngineConfig(
+        num_pages=8, page_size=PS, max_slots=2, host_pages=16,
+        swap_mode="swap", speculative_swap=True))
+    rng = np.random.default_rng(2)  # same seed rationale as above
+    reqs = [Request(i, 0.0,
+                    rng.integers(0, cfg.vocab_size, 17).tolist(),
+                    max_new_tokens=20) for i in range(2)]
+    issues, completes, cancels = [], [], []
+    orig = eng.scheduler.schedule
+
+    def spy():
+        plan = orig()
+        issues.extend(plan.swap_issue)
+        completes.extend(plan.swap_complete)
+        cancels.extend(plan.swap_cancel)
+        return plan
+
+    eng.scheduler.schedule = spy
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_to_completion()
+    assert issues, "the crunch must exercise the overlapped path"
+    assert len(completes) + len(cancels) == len(issues), \
+        "every issue resolves exactly once"
+    for r in reqs:
+        assert r.preemptions == 0
+        want = _oracle(model, params, cfg, r.prompt, len(r.full_output))
+        assert r.full_output == want, f"req {r.request_id}"
+    a = eng.allocator
+    assert a.num_free == a.num_blocks and a.swapped_pages == 0
+    assert a.pending_out_pages == 0, "the pending ledger drains to empty"
+
+
+def test_engine_peer_spill_restore_token_identity(model_setup_f32):
+    """ACCEPTANCE (peer tier, real engines): a cold prefix page parked in
+    a NEIGHBOR engine's free device memory and restored on hit carries
+    the real KV payload — the restored-prefix request decodes
+    token-identically to the from-scratch oracle, and the rBlock loan is
+    repaid with both allocators draining to empty."""
+    from repro.serving.router import RouterBackend
+
+    class _Pin:  # place every request on engine 0
+        def choose(self, req, children):
+            return 0
+
+    cfg, model, params = model_setup_f32
+    engines = [PagedEngine(cfg, params, EngineConfig(
+        num_pages=16, page_size=PS, max_slots=2, host_pages=16,
+        enable_prefix_cache=True, cache_spill_pages=4))
+        for _ in range(2)]
+    router = RouterBackend(engines, policy=_Pin(), prefix_share=True,
+                           peer_spill=True)
+
+    def drain(req):
+        for _ in range(10_000):
+            if req.phase == Phase.FINISHED:
+                return
+            router.step()
+        raise AssertionError("router did not finish the request")
+
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, 2 * PS).tolist()
+    r0 = Request(0, 0.0,
+                 prefix + rng.integers(0, cfg.vocab_size, 4).tolist(),
+                 max_new_tokens=3)
+    router.add_request(r0)
+    drain(r0)
+    pc = engines[0].prefix_cache
+    pc.evict(1)  # park the cold leaf page on the neighbor
+    assert pc.peer_spilled_pages == 1 and router.g.lent_by(1) == 1
+    r1 = Request(1, 0.0,
+                 prefix + rng.integers(0, cfg.vocab_size, 4).tolist(),
+                 max_new_tokens=3)
+    router.add_request(r1)
+    drain(r1)
+    assert pc.peer_restored_pages == 1, "the hit restored the parked page"
+    assert router.g.lent_by(1) == 0, "the loan is repaid on restore"
+    assert r1.num_cached_tokens == 2 * PS
+    for r in (r0, r1):
+        want = _oracle(model, params, cfg, r.prompt, len(r.full_output))
+        assert r.full_output == want, f"req {r.request_id}"
+    pc.clear()
+    assert engines[1].allocator.num_used == 0
+    assert engines[0].allocator.num_free == 16
+
+
+# -- telemetry: the pending-span invariants in validate_swap_balance -----------
+
+def _pending_ev(ph, rid, ts, **args):
+    e = {"cat": "swap", "name": "pending", "ph": ph, "ts": ts,
+         "pid": 0, "tid": 0, "id": rid}
+    if args:
+        e["args"] = args
+    return e
+
+
+def test_validate_swap_balance_pending_span_invariants():
+    from repro.core.telemetry.export import validate_swap_balance
+    ok = [_pending_ev("b", 1, 10.0),
+          _pending_ev("e", 1, 20.0, outcome="complete"),
+          _pending_ev("b", 1, 30.0),
+          _pending_ev("e", 1, 40.0, outcome="cancel")]
+    assert validate_swap_balance({"traceEvents": ok}) == []
+
+    errs = validate_swap_balance({"traceEvents": [
+        _pending_ev("b", 1, 1.0), _pending_ev("b", 1, 2.0),
+        _pending_ev("e", 1, 3.0, outcome="cancel")]})
+    assert any("already in flight" in e for e in errs)
+
+    errs = validate_swap_balance({"traceEvents": [
+        _pending_ev("e", 1, 3.0, outcome="complete")]})
+    assert any("without an open issue" in e for e in errs)
+
+    errs = validate_swap_balance({"traceEvents": [
+        _pending_ev("b", 1, 1.0),
+        _pending_ev("e", 1, 2.0, outcome="done")]})
+    assert any("outcome" in e for e in errs)
+
+    errs = validate_swap_balance({"traceEvents": [_pending_ev("b", 1, 1.0)]})
+    assert any("never resolved" in e for e in errs)
+
+
+def test_validate_swap_balance_no_work_while_pages_in_flight():
+    from repro.core.telemetry.export import validate_swap_balance
+
+    def act(name, ts, cat="sched"):
+        return {"cat": cat, "name": name, "ph": "i", "ts": ts,
+                "pid": 0, "tid": 0, "args": {"rid": 1}}
+
+    span = [_pending_ev("b", 1, 1.0),
+            _pending_ev("e", 1, 9.0, outcome="complete")]
+    for bad in (act("admit", 5.0), act("swap_in", 5.0),
+                act("chunk", 5.0, cat="req")):
+        errs = validate_swap_balance({"traceEvents": span + [bad]})
+        assert any("in flight" in e for e in errs), bad["name"]
+    # the same work OUTSIDE the span (and for other rids) is fine
+    outside = act("admit", 12.0)
+    other = dict(act("admit", 5.0), args={"rid": 2})
+    assert validate_swap_balance(
+        {"traceEvents": span + [outside, other]}) == []
 
 
 # -- satellite 1: KVHandoff deferral fallback ----------------------------------

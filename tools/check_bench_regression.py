@@ -1,0 +1,107 @@
+"""Bench-regression guard: fresh BENCH_swap_sweep.json vs committed baseline.
+
+CI copies the checkout's committed ``bench_out/BENCH_swap_sweep.json`` aside
+BEFORE ``benchmarks/run.py`` overwrites the directory, then calls this tool
+to compare the fresh artifact against it. Two classes of check:
+
+* **Tolerance band** — every metric key present in BOTH artifacts must not
+  regress by more than ``--tolerance`` (relative): throughputs may not drop,
+  P99 normalized latencies may not rise. The sim is virtual-clock
+  deterministic, so the band only absorbs intentional model recalibration;
+  improvements always pass.
+* **Overlap headline** — the long-point ``swap-overlap-cost`` row (overlapped
+  PCIe transfers + cost-ranked victims) must beat the baseline's serial
+  ``swap`` row: ≥ +5% throughput, OR lower P99 normalized latency at equal-
+  or-better throughput. This is the PR acceptance criterion, kept green
+  forever after.
+
+    python tools/check_bench_regression.py BASELINE FRESH [--tolerance 0.02]
+
+Exit status is non-zero on any regression; every comparison is printed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HEADLINE_GAIN = 1.05  # +5% throughput branch of the headline check
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)["metrics"]
+
+
+def compare(base: dict, fresh: dict, tolerance: float) -> list:
+    """Returns a list of human-readable regressions (empty ⇒ pass)."""
+    problems = []
+
+    def band(group, higher_is_better):
+        b, f = base.get(group) or {}, fresh.get(group) or {}
+        for key in sorted(set(b) & set(f)):
+            bv, fv = b[key], f[key]
+            if bv <= 0:
+                continue
+            rel = fv / bv - 1.0
+            bad = rel < -tolerance if higher_is_better else rel > tolerance
+            arrow = "REGRESSION" if bad else "ok"
+            print(f"  {group}[{key}]: {bv:.6g} -> {fv:.6g} "
+                  f"({rel:+.2%}) {arrow}")
+            if bad:
+                problems.append(f"{group}[{key}] regressed {rel:+.2%} "
+                                f"(tolerance {tolerance:.0%})")
+
+    band("long_throughput", higher_is_better=True)
+    band("short_throughput", higher_is_better=True)
+    band("long_p99_norm_lat", higher_is_better=False)
+
+    if not fresh.get("reprefill_ok", False):
+        problems.append("no-re-prefill proof failed in the fresh run")
+
+    # overlap headline: fresh overlap+cost vs the baseline serial swap row
+    base_thr = (base.get("long_throughput") or {}).get("swap")
+    base_p99 = (base.get("long_p99_norm_lat") or {}).get("swap")
+    ovl_thr = (fresh.get("long_throughput") or {}).get("swap-overlap-cost")
+    ovl_p99 = (fresh.get("long_p99_norm_lat") or {}).get("swap-overlap-cost")
+    if None in (base_thr, base_p99, ovl_thr, ovl_p99):
+        problems.append("headline rows missing: need baseline long swap and "
+                        "fresh long swap-overlap-cost metrics")
+    else:
+        gain = ovl_thr / base_thr
+        print(f"  headline: overlap+cost {ovl_thr:.2f} tok/s vs baseline "
+              f"swap {base_thr:.2f} ({gain - 1:+.2%}), "
+              f"p99 {ovl_p99 * 1e3:.2f} vs {base_p99 * 1e3:.2f} ms/tok")
+        if not (gain >= HEADLINE_GAIN
+                or (gain >= 1.0 and ovl_p99 < base_p99)):
+            problems.append(
+                f"overlap+cost headline does not beat the baseline swap "
+                f"row: thr {gain - 1:+.2%} (needs >= +{HEADLINE_GAIN - 1:.0%}"
+                f") and p99 {ovl_p99:.6g} vs {base_p99:.6g} "
+                f"(needs lower at equal-or-better throughput)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="compare a fresh BENCH_swap_sweep.json to the baseline")
+    ap.add_argument("baseline", help="committed baseline artifact")
+    ap.add_argument("fresh", help="freshly produced artifact")
+    ap.add_argument("--tolerance", type=float, default=0.02, metavar="FRAC",
+                    help="relative regression band (default 0.02)")
+    args = ap.parse_args()
+    base, fresh = _load(args.baseline), _load(args.fresh)
+    print(f"comparing {args.fresh} against {args.baseline} "
+          f"(tolerance {args.tolerance:.0%})")
+    problems = compare(base, fresh, args.tolerance)
+    if problems:
+        print("\nbench regressions:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print("bench regression guard: ok")
+
+
+if __name__ == "__main__":
+    main()
