@@ -43,6 +43,7 @@ def main() -> None:
     import benchmarks.chunked_prefill_sweep as chunked_prefill_sweep
     import benchmarks.disagg_sweep as disagg_sweep
     import benchmarks.prefix_cache_sweep as prefix_cache_sweep
+    import benchmarks.mla_sweep as mla_sweep
     import benchmarks.roofline_report as roofline_report
     import benchmarks.router_sweep as router_sweep
     import benchmarks.swap_sweep as swap_sweep
@@ -190,6 +191,27 @@ def main() -> None:
               "reprefill_ok": not next(
                   r for r in rows if r["system"] == "proof"
               )["reprefill_problems"]})
+
+    bench("mla_sweep", "mla_sweep (latent-KV paging vs GQA at fixed HBM)",
+          mla_sweep.run,
+          # the two layout points are already CI-sized; the HBM KV budget
+          # is pinned here so the artifact records it
+          {"hbm_budget": mla_sweep.HBM_KV_BUDGET},
+          mla_sweep.headline,
+          lambda rows: {
+              "bytes_per_token": {r["layout"]: r["bytes_per_token"]
+                                  for r in rows},
+              "compression_ratio":
+                  next(r for r in rows if r["layout"] == "gqa")
+                  ["bytes_per_token"]
+                  / next(r for r in rows if r["layout"] == "mla")
+                  ["bytes_per_token"],
+              "throughput": {r["layout"]: r["throughput"] for r in rows},
+              "p99_norm_lat": {r["layout"]: r["p99_norm_lat"]
+                               for r in rows},
+              "achievable_batch": {r["layout"]: r["achievable_batch"]
+                                   for r in rows},
+              "completed": {r["layout"]: r["completed"] for r in rows}})
 
     bench("prefix_cache_sweep", "prefix_cache_sweep (radix KV reuse)",
           prefix_cache_sweep.run,

@@ -34,6 +34,11 @@ class NetworkModel:
     """
 
     gbps: float = 100.0          # interconnect bandwidth
+    # serialized payload of one page under the *default* (GQA-ish) layout.
+    # Every byte-charging method takes an optional per-call ``page_bytes``
+    # override so compressed layouts (MLA latent pages are ~10x smaller)
+    # are charged their actual wire bytes — see ``KVPageLayout.page_bytes``
+    # and :meth:`for_layout`.
     page_bytes: int = 13_107_200  # serialized K+V payload of one page
     t_page_fixed: float = 40e-6  # per-page serialization + RPC overhead
     t_lease_fixed: float = 20e-6  # one-time lease/borrow RPC per request
@@ -56,26 +61,35 @@ class NetworkModel:
     # spill target than host when one is available
     nvlink_gbps: float = 600.0
 
-    def swap_time(self, n_pages: int) -> float:
+    @classmethod
+    def for_layout(cls, layout, page_size: int, **overrides) -> "NetworkModel":
+        """A model whose default ``page_bytes`` matches a ``KVPageLayout``."""
+        overrides.setdefault("page_bytes", layout.page_bytes(page_size))
+        return cls(**overrides)
+
+    def _pb(self, page_bytes) -> int:
+        return self.page_bytes if page_bytes is None else page_bytes
+
+    def swap_time(self, n_pages: int, *, page_bytes: int = None) -> float:
         """One direction of a swap: ``n_pages`` over PCIe plus one DMA
         setup. A swap round trip (out now, in later) costs twice this."""
         if n_pages <= 0:
             return 0.0
-        wire = self.page_bytes * 8.0 / (self.pcie_gbps * 1e9)
+        wire = self._pb(page_bytes) * 8.0 / (self.pcie_gbps * 1e9)
         return self.t_swap_fixed + n_pages * wire
 
-    def peer_copy_time(self, n_pages: int) -> float:
+    def peer_copy_time(self, n_pages: int, *, page_bytes: int = None) -> float:
         """One direction of a peer spill/restore: ``n_pages`` device pages
         moved to/from a neighbor instance over the NVLink-class lane, plus
         one transfer setup."""
         if n_pages <= 0:
             return 0.0
-        wire = self.page_bytes * 8.0 / (self.nvlink_gbps * 1e9)
+        wire = self._pb(page_bytes) * 8.0 / (self.nvlink_gbps * 1e9)
         return self.t_swap_fixed + n_pages * wire
 
-    def page_copy_time(self, n_pages: int) -> float:
+    def page_copy_time(self, n_pages: int, *, page_bytes: int = None) -> float:
         """One-time payload transfer of ``n_pages`` (copy-mode adoption)."""
-        wire = self.page_bytes * 8.0 / (self.gbps * 1e9)
+        wire = self._pb(page_bytes) * 8.0 / (self.gbps * 1e9)
         return n_pages * (self.t_page_fixed + wire)
 
     def lease_time(self, n_pages: int) -> float:
@@ -96,7 +110,8 @@ class NetworkModel:
 
     def prefer_borrow(self, n_pages: int, page_size: int,
                       est_decode_tokens: int,
-                      expected_reuse: float = 1.0) -> bool:
+                      expected_reuse: float = 1.0, *,
+                      page_bytes: int = None) -> bool:
         """The ``share_mode="auto"`` decision for one admission.
 
         ``expected_reuse`` amortizes the one-time copy across the requests
@@ -106,7 +121,7 @@ class NetworkModel:
         transfer is paid once while every borrower pays merge overhead for
         its whole decode. ``expected_reuse=1`` is the original myopic
         per-request decision."""
-        copy_amortized = self.page_copy_time(n_pages) / max(expected_reuse,
-                                                            1.0)
+        copy_amortized = self.page_copy_time(
+            n_pages, page_bytes=page_bytes) / max(expected_reuse, 1.0)
         return self.borrow_lifetime_cost(
             n_pages, page_size, est_decode_tokens) < copy_amortized

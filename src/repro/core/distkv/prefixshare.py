@@ -76,6 +76,11 @@ class PrefixShareBoard:
     def __init__(self, max_pages: Optional[int] = None):
         self._root = PublishedPage(key=(), payload=None, home=-1)
         self.page_size: Optional[int] = None
+        # KVPageLayout schema tag of every payload on this board (first
+        # publisher pins it). Payloads with a different schema are refused:
+        # a GQA page adopted into an MLA pool (or vice versa) would be
+        # silently-reinterpreted garbage, not a graceful miss.
+        self.schema: Optional[str] = None
         self.max_pages = max_pages
         # zero-copy lending hooks, set by the cluster router when borrowed
         # rBlock serving is enabled: ``on_pin(home, block)`` fires when a
@@ -99,13 +104,16 @@ class PrefixShareBoard:
 
     def publish(self, instance_id: int, tokens: Sequence[int],
                 payloads: Sequence[Any], page_size: int,
-                blocks: Optional[Sequence[int]] = None) -> int:
+                blocks: Optional[Sequence[int]] = None,
+                schema: Optional[str] = None) -> int:
         """Publish a page-aligned path: page ``i`` holds
         ``tokens[i*ps:(i+1)*ps]`` with KV contents ``payloads[i]``.
         Pages already on the board are kept (first publisher wins — the
         payloads are equivalent by construction). ``blocks`` (optional)
         offers the publisher's physical page ids for zero-copy lending;
-        each newly-recorded block is pinned via :attr:`on_pin`. Returns
+        each newly-recorded block is pinned via :attr:`on_pin`. ``schema``
+        is the publisher's ``KVPageLayout.schema`` tag; like ``page_size``
+        it must match across all publishers of one board. Returns
         #pages added."""
         if self.page_size is None:
             self.page_size = page_size
@@ -113,6 +121,15 @@ class PrefixShareBoard:
             raise ValueError(
                 f"mixed page sizes on one board: {self.page_size} vs "
                 f"{page_size} — cross-instance pages must be interchangeable")
+        if schema is not None:
+            if self.schema is None:
+                self.schema = schema
+            elif self.schema != schema:
+                raise ValueError(
+                    f"KV layout schema mismatch on one board: "
+                    f"{self.schema!r} vs {schema!r} — refusing to publish "
+                    "pages a peer with a different layout could adopt as "
+                    "garbage")
         node, new = self._root, 0
         self._clock += 1
         for i in range(len(tokens) // page_size):

@@ -50,6 +50,10 @@ class RemoteLease:
     debtor: int
     blocks: List[int]         # physical page ids on the creditor
     page_size: int
+    # KVPageLayout schema of the pages on the creditor (None = unknown,
+    # sim). The installing engine validates this against its own layout —
+    # attending over foreign-layout pages would read garbage.
+    schema: Optional[str] = None
     _release: Optional[Callable[["RemoteLease"], None]] = None
     _on_commit: Optional[Callable[["RemoteLease"], None]] = None
     _refs: int = 1
@@ -105,6 +109,11 @@ class RManager:
         self.peers: Dict[int, "RManager"] = {}
         self._next_rblock = 0
         self.seqs: Dict[int, SeqKV] = {}
+        # KVPageLayout schema of this instance's pages (None when the
+        # allocator carries no layout, e.g. pure-sim backends)
+        layout = getattr(allocator, "layout", None)
+        self.schema: Optional[str] = layout.schema if layout is not None \
+            else None
         # telemetry: this instance's Tracer (wired by the cluster router),
         # or None — emission sites guard on it
         self.trace = None
@@ -164,7 +173,16 @@ class RManager:
         (debtor) rManager."""
         if home == self.instance_id:
             raise ValueError("borrowing from oneself — serve locally instead")
-        self.peers[home].lend_blocks(self.instance_id, blocks)
+        lender = self.peers[home]
+        if self.schema is not None and lender.schema is not None \
+                and self.schema != lender.schema:
+            raise ValueError(
+                f"KV layout schema mismatch on lease grant: debtor instance "
+                f"{self.instance_id} has layout {self.schema!r} but creditor "
+                f"{home} holds {lender.schema!r} pages — refusing the "
+                "zero-copy borrow (attending over foreign-layout pages "
+                "would read garbage)")
+        lender.lend_blocks(self.instance_id, blocks)
         if self.trace is not None:
             self.trace.instant("lease", "borrow", home=home,
                                pages=len(blocks))
@@ -176,6 +194,7 @@ class RManager:
         return RemoteLease(home=home, debtor=self.instance_id,
                            blocks=list(blocks),
                            page_size=self.allocator.block_size,
+                           schema=lender.schema,
                            _release=_repay)
 
     # -- borrowing side -----------------------------------------------------------
@@ -249,7 +268,8 @@ class RManager:
         like the debt ledger). Peers adopt via :meth:`lookup_prefix` +
         ``PrefixCache.adopt``."""
         return self.g.prefix_board.publish(self.instance_id, tokens, payloads,
-                                           self.allocator.block_size)
+                                           self.allocator.block_size,
+                                           schema=self.schema)
 
     def lookup_prefix(self, tokens, max_tokens=None):
         """Longest published page chain for ``tokens`` (any home instance)."""

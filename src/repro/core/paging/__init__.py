@@ -1,3 +1,5 @@
 from repro.core.paging.allocator import (  # noqa: F401
     BlockAllocator, BlockTable, ContiguousPreallocAllocator, OutOfBlocks,
     OutOfHostBlocks)
+from repro.core.paging.layout import (  # noqa: F401
+    KVPageLayout, PoolSpec, check_schema)

@@ -70,9 +70,12 @@ class BlockTable:
 
 class BlockAllocator:
     def __init__(self, num_blocks: int, block_size: int,
-                 host_blocks: int = 0):
+                 host_blocks: int = 0, layout=None):
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # the KVPageLayout whose pages these blocks index (None = unknown,
+        # e.g. pure-sim backends); cost models read ``page_bytes`` off it
+        self.layout = layout
         self.free_list: List[int] = list(range(num_blocks - 1, -1, -1))
         self.refcount: Dict[int, int] = {}
         # host swap tier (0 = disabled): host pages are snapshots owned by
@@ -85,6 +88,13 @@ class BlockAllocator:
         self._pending_out: Dict[int, List[Tuple[int, int]]] = {}
         self._pending_seq = 0
         self.pending_out_pages = 0
+
+    @property
+    def page_bytes(self) -> Optional[int]:
+        """Serialized bytes of one page, from the layout (None if unknown)."""
+        if self.layout is None:
+            return None
+        return self.layout.page_bytes(self.block_size)
 
     # -- raw blocks -----------------------------------------------------------
     @property

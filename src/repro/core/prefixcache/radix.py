@@ -64,7 +64,13 @@ per *committed* admission that reuses the node — neither routing-policy
 (:meth:`take_hot_paths`) to publish their token keys + page payloads through
 the distkv layer, and a peer instance adopts a published path into its own
 tree with :meth:`adopt` — fresh local blocks, tree-owned, so the peer serves
-the shared system prompt without ever computing it.
+the shared system prompt without ever computing it. The tree itself is
+**payload-agnostic**: it tracks block *ids* and token keys only, never page
+contents or their shape, so it works unchanged over any
+:class:`~repro.core.paging.layout.KVPageLayout` (full GQA K/V pages and
+MLA latent ckv/krope pages alike) — payload movement lives entirely in the
+spill/publish/adopt hooks its owner wires, and the schema-compatibility
+check between instances lives on the share board and lease grants.
 
 Spill-to-host (tiered cache). With ``spill_budget > 0`` and a host tier on
 the allocator, a cold leaf under eviction pressure *spills* to a host page

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.layers import (NO_POLICY, ShardingPolicy, apply_rope, dense,
-                                 dense_init, mlp, norm_init, rms_norm)
+                                 dense_init, mlp, norm_init, pad_last,
+                                 rms_norm)
 
 # The dry-run's cost-model compiles set this so the query-chunk scan unrolls:
 # XLA's cost analysis counts a while body once regardless of trip count, so
@@ -98,20 +99,23 @@ def _chunk_size(s: int) -> int:
 def blockwise_attention(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         q_offset: int = 0,
+                        scale: Optional[float] = None,
                         policy: ShardingPolicy = NO_POLICY):
     """q: (B,S,H,Dh); k,v: (B,Skv,Hkv,Dh). GQA broadcast, fp32 softmax.
 
     Scans over query chunks so the score matrix never materializes at
     (S x Skv); per-chunk live memory is (B, C, H, Skv).
     ``q_offset``: absolute position of q[0] relative to k[0] (cross-attention
-    passes causal=False and ignores it).
+    passes causal=False and ignores it). ``scale`` overrides the default
+    ``1/sqrt(Dh)`` (the absorbed-MLA path scores in a lifted latent dim but
+    must scale by the *conceptual* head dim).
     """
     b, s, h, dh = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     dv = v.shape[-1]
     g = h // hkv
     c = _chunk_size(s)
-    scale = 1.0 / math.sqrt(dh)
+    scale = (1.0 / math.sqrt(dh)) if scale is None else scale
     kg = k.astype(jnp.bfloat16)
     vg = v.astype(jnp.bfloat16)
     kv_pos = jnp.arange(skv)
@@ -178,7 +182,7 @@ def blockwise_attention(q, k, v, *, causal: bool = True,
 
 
 def gqa_layer(cfg, p, x, positions, attend, *,
-              policy: ShardingPolicy = NO_POLICY):
+              policy: ShardingPolicy = NO_POLICY, mlp_fn=None):
     """One full GQA transformer layer, parameterized by the attention
     callable — the single layer body shared by the models' full-sequence
     path, the engine's fused paged decode, and the cached-prefix suffix
@@ -189,7 +193,8 @@ def gqa_layer(cfg, p, x, positions, attend, *,
     roped k / raw v (B, S, Hkv, Dh), returns the attention context
     (B, S, H, Dv) plus an arbitrary carry (e.g. updated KV page buffers)
     threaded back to the caller. Layout: pre-norm, residual attention,
-    pre-norm residual MLP.
+    pre-norm residual MLP. ``mlp_fn(p_mlp, h) -> out`` overrides the dense
+    MLP (MoE segments pass their expert dispatch).
     """
     b, s, _ = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -206,7 +211,8 @@ def gqa_layer(cfg, p, x, positions, attend, *,
     ctx = policy.act(ctx, "heads_bshd")
     y = x + dense(p["attn"]["wo"], ctx.reshape(b, s, -1), policy, "act_bsd")
     h2 = rms_norm(p["ln2"], y, cfg.norm_eps)
-    y = y + mlp(p["mlp"], h2, policy)
+    y = y + (mlp(p["mlp"], h2, policy) if mlp_fn is None
+             else mlp_fn(p["mlp"], h2))
     return y, carry
 
 
@@ -416,6 +422,85 @@ def mla_decode(cfg, p, x, cache: MLACache, pos, *,
                      preferred_element_type=jnp.float32)
     y = dense(p["wo"], out.reshape(b, 1, h * dv).astype(x.dtype), policy, "act_bsd")
     return y, cache
+
+
+def mla_absorb(cfg, p):
+    """Split ``wkv_b`` into the absorbed matrices: ``(w_uk, w_uv)`` with
+    shapes ``(r, h, dn)`` / ``(r, h, dv)``. W_UK folds into the query path
+    (queries lifted to the latent dim), W_UV into the output projection —
+    decode then attends *directly over latent pages*, never materializing
+    per-head K/V."""
+    r, h = cfg.kv_lora_rank, cfg.num_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    wkv_b = p["wkv_b"]["w"].reshape(r, h, dn + dv)
+    return wkv_b[..., :dn], wkv_b[..., dn:]
+
+
+def mla_effective_ctx(ckv, krope):
+    """Latent context as single-kv-head effective K/V: keys are
+    ``concat(ckv, krope)`` with ``Hkv = 1`` (the latent is shared across
+    heads — MQA in the latent space), values are ``ckv`` zero-padded to the
+    key width (attention is linear in v, so the pad columns stay zero —
+    slice the context back to ``[..., :r]`` after attending).
+
+    ckv: (B,T,r); krope: (B,T,dr) -> k_eff, v_eff: (B,T,1,r+dr)."""
+    k_eff = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+    v_eff = pad_last(ckv, k_eff.shape[-1])[:, :, None, :]
+    return k_eff, v_eff
+
+
+def mla_effective_kv(q_lat, qr, ckv, krope):
+    """Express absorbed-MLA attention as single-kv-head MHA so the generic
+    machinery (``blockwise_attention``, ``attention_partial`` merges) runs
+    it unchanged: queries are ``concat(q_lat, qr)`` — scores decompose as
+    ``q_lat . ckv + qr . krope`` — and K/V come from
+    :func:`mla_effective_ctx`.
+
+    q_lat: (B,S,H,r); qr: (B,S,H,dr); ckv: (B,T,r); krope: (B,T,dr).
+    Callers must pass ``scale=_mla_scale(cfg)`` — the conceptual head dim is
+    ``dn + dr``, not the lifted ``r + dr``.
+    """
+    q_eff = jnp.concatenate([q_lat, qr], axis=-1)
+    k_eff, v_eff = mla_effective_ctx(ckv, krope)
+    return q_eff, k_eff, v_eff
+
+
+def mla_layer(cfg, p, x, positions, attend_latent, *,
+              policy: ShardingPolicy = NO_POLICY, mlp_fn=None):
+    """One full MLA transformer layer parameterized by the latent attention
+    callable — the MLA sibling of :func:`gqa_layer`, shared by the engine's
+    paged prefill/decode paths.
+
+    ``attend_latent(q_lat, qr, ckv_new, krope_new) -> (ctx_lat, carry)``
+    receives absorbed queries ``q_lat`` (B,S,H,r), roped rope-queries ``qr``
+    (B,S,H,dr), and this chunk's latent page payloads ``ckv_new`` (B,S,r) /
+    ``krope_new`` (B,S,dr) (normed / pre-roped — exactly what the pools
+    store); it returns the latent-space context (B,S,H,r) plus a carry
+    (e.g. updated latent page buffers). The output projection absorbs W_UV.
+    """
+    b, s, _ = x.shape
+    h, r, dv = cfg.num_heads, cfg.kv_lora_rank, cfg.v_head_dim
+    hn = rms_norm(p["ln1"], x, cfg.norm_eps)
+    qn, qr = _mla_q(cfg, p["attn"], hn)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    kv = dense(p["attn"]["wkv_a"], hn)
+    ckv_new = rms_norm(p["attn"]["kv_norm"], kv[..., :r], cfg.norm_eps)
+    krope_new = apply_rope(kv[..., r:], positions, cfg.rope_theta,
+                           heads=False)
+    w_uk, w_uv = mla_absorb(cfg, p["attn"])
+    q_lat = jnp.einsum("bshd,rhd->bshr", qn.astype(jnp.bfloat16),
+                       w_uk.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx_lat, carry = attend_latent(q_lat, qr, ckv_new, krope_new)
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat.astype(jnp.bfloat16),
+                     w_uv.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    y = x + dense(p["attn"]["wo"], out.reshape(b, s, h * dv).astype(x.dtype),
+                  policy, "act_bsd")
+    h2 = rms_norm(p["ln2"], y, cfg.norm_eps)
+    y = y + (mlp(p["mlp"], h2, policy) if mlp_fn is None
+             else mlp_fn(p["mlp"], h2))
+    return y, carry
 
 
 def mla_prefill_cache(cfg, p, x, positions, capacity: int):

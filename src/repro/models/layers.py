@@ -74,6 +74,17 @@ def rms_norm(p, x, eps: float = 1e-5):
     return y
 
 
+def pad_last(x, target: int):
+    """Zero-pad the trailing axis of ``x`` up to ``target`` elements.
+
+    Used by the absorbed-MLA path to lift latent values to the effective
+    key width (attention output is linear in v, so zero rows are inert)."""
+    pad = target - x.shape[-1]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+
+
 # ---------------------------------------------------------------------------
 # RoPE
 # ---------------------------------------------------------------------------

@@ -241,8 +241,9 @@ class KVHandoff:
         # token is already out, so the myopic borrow-vs-copy estimate uses
         # what is left, not max_new_tokens
         remaining = max(req.max_new_tokens - len(req.output), 1)
-        if r.net is None or r.net.prefer_borrow(full_pages, page_size,
-                                                remaining):
+        if r.net is None or r.net.prefer_borrow(
+                full_pages, page_size, remaining,
+                page_bytes=r._kv_page_bytes(req.instance_id)):
             return "zero_copy"
         return "migrate"
 
@@ -291,10 +292,11 @@ class KVHandoff:
                                  num_tokens=req.prompt_len)
             pages = len(new_blocks)
             if net is not None:
+                pb = r._kv_page_bytes(d_idx)
                 if charge is not None:
-                    charge(net.page_copy_time(pages))
+                    charge(net.page_copy_time(pages, page_bytes=pb))
                 if m is not None:
-                    m.count("net_bytes", pages * net.page_bytes)
+                    m.count("net_bytes", r._net_bytes(d_idx, pages))
             self.handoffs_migrated += 1
             self.pages_copied += pages
         else:
@@ -315,7 +317,9 @@ class KVHandoff:
             if net is not None:
                 if charge is not None:
                     charge(net.lease_time(full) +
-                           (net.page_copy_time(1) if tail else 0.0))
+                           (net.page_copy_time(
+                               1, page_bytes=r._kv_page_bytes(d_idx))
+                            if tail else 0.0))
                 if m is not None:
                     m.count("borrowed_pages", full)
             r.leases_granted += 1

@@ -66,15 +66,19 @@ from repro.configs import ArchConfig
 from repro.core.distkv.dist_attention import (attention_partial,
                                               merge_partials_tree)
 from repro.core.paging.allocator import BlockAllocator, BlockTable
+from repro.core.paging.layout import KVPageLayout, check_schema
 from repro.core.prefixcache.radix import PrefixCache
 from repro.core.scheduling.iteration import IterationScheduler
 from repro.core.scheduling.request import Phase, Request
 from repro.core.telemetry import MetricsRegistry, Tracer
 from repro.kernels import ops, ref
 from repro.models import Model
+from repro.models import moe as moe_mod
 from repro.models import sampling
 from repro.models.layers import embed, rms_norm, unembed
-from repro.models.attention import blockwise_attention, gqa_layer
+from repro.models.attention import (_mla_scale, blockwise_attention,
+                                    gqa_layer, mla_effective_ctx,
+                                    mla_effective_kv, mla_layer)
 from repro.serving.api import SamplingParams
 
 
@@ -149,16 +153,33 @@ class PagedEngine:
         self.ecfg = ecfg
         self.params = params
         self.model = Model(cfg, remat=False)
-        assert len(self.model.plan) == 1 and self.model.plan[0].mixer == "gqa", \
-            "PagedEngine serves single-segment GQA archs; others use Model.decode_step"
+        mixers = {seg.mixer for seg in self.model.plan}
+        assert len(mixers) == 1 and mixers <= {"gqa", "mla"}, \
+            "PagedEngine serves uniform GQA or MLA stacks; others use " \
+            "Model.decode_step"
+        # the page-payload schema every pool / payload / lease goes through:
+        # GQA pools are per-head (k, v); MLA pools are the shared latent
+        # (ckv, krope) — ~10x fewer bytes per token
+        self.kv_layout = KVPageLayout.from_arch(cfg)
+        self.flavor = self.kv_layout.flavor
+        if self.flavor == "mla" and ecfg.use_kernel:
+            raise ValueError("the Pallas paged_attention kernel is GQA-only;"
+                             " MLA decode runs the pure-XLA latent path")
+        if self.flavor == "mla" and cfg.sliding_window:
+            raise ValueError("MLA + sliding window is unsupported")
         self.nlayers = cfg.num_layers
         L, P, ps = cfg.num_layers, ecfg.num_pages, ecfg.page_size
-        # +1 trash page: inactive decode slots park their writes there
-        self.k_pages = jnp.zeros((L, P + 1, ps, cfg.num_kv_heads,
-                                  cfg.head_dim), cfg.param_dtype)
-        self.v_pages = jnp.zeros_like(self.k_pages)
+        # +1 trash page: inactive decode slots park their writes there.
+        # Pool attribute names stay ``k_pages``/``v_pages`` for every
+        # layout — they are "pool A"/"pool B" of ``kv_layout.pools`` (MLA:
+        # ckv / krope); all page-granular plumbing (COW, swap, spill,
+        # export) indexes only axis 1 and never the trailing token shape.
+        shape_a, shape_b = self.kv_layout.pool_shapes(P + 1, ps)
+        self.k_pages = jnp.zeros(shape_a, cfg.param_dtype)
+        self.v_pages = jnp.zeros(shape_b, cfg.param_dtype)
         self.allocator = BlockAllocator(P, ps,
-                                        host_blocks=ecfg.host_pages)
+                                        host_blocks=ecfg.host_pages,
+                                        layout=self.kv_layout)
         self.prefix_cache = PrefixCache(
             self.allocator, spill_budget=ecfg.cache_spill_pages) \
             if ecfg.enable_prefix_cache else None
@@ -177,9 +198,9 @@ class PagedEngine:
         # schedule() can reallocate-and-write the freed device pages
         if ecfg.host_pages:
             H = ecfg.host_pages
-            self.h_k_pages = np.zeros((L, H, ps, cfg.num_kv_heads,
-                                       cfg.head_dim), self.k_pages.dtype)
-            self.h_v_pages = np.zeros_like(self.h_k_pages)
+            h_shape_a, h_shape_b = self.kv_layout.pool_shapes(H, ps)
+            self.h_k_pages = np.zeros(h_shape_a, self.k_pages.dtype)
+            self.h_v_pages = np.zeros(h_shape_b, self.v_pages.dtype)
             self.scheduler.swap_out_hook = self._swap_out_copy
             self.scheduler.swap_in_hook = self._swap_in_copy
             # double-buffered (issue/complete) halves for speculative
@@ -232,9 +253,62 @@ class PagedEngine:
             self.trace = None
             self.metrics = None
         self._window = cfg.sliding_window \
-            if self.model.plan[0].attn_kind == "swa" else None
+            if any(seg.attn_kind == "swa" for seg in self.model.plan) \
+            else None
 
     # -- jitted model steps ----------------------------------------------------
+
+    def _mlp_fn(self, seg):
+        """Per-segment MLP dispatch for the shared layer bodies: dense
+        segments use the layer default, MoE segments route through the
+        expert dispatch (DeepSeek-V2's plan is 1 dense + N-1 MoE layers)."""
+        if seg.mlp_kind == "moe":
+            return lambda pm, h: moe_mod.moe_forward(self.cfg, pm, h)
+        return None
+
+    def _run_segments(self, params, k_pages, v_pages, rk, rv, x, body):
+        """Thread ``x`` through every segment of the plan, slicing the
+        layer axis of both page pools (and the remote payload arrays) per
+        segment. ``body(seg, p_i, poolA, poolB, rA_i, rB_i, x) ->
+        (x, poolA', poolB')`` runs ONE layer; stacked segments (seg.n > 1)
+        ``lax.scan`` it over their stacked params + pool slices. Returns
+        (x, k_pages, v_pages) with the pools reassembled along the layer
+        axis."""
+        off = 0
+        a_parts, b_parts = [], []
+        for seg, p_seg in zip(self.model.plan, params["segments"]):
+            kp_seg = k_pages[off:off + seg.n]
+            vp_seg = v_pages[off:off + seg.n]
+            rk_seg = rk[off:off + seg.n]
+            rv_seg = rv[off:off + seg.n]
+            if seg.n == 1:
+                x, kp2, vp2 = body(seg, p_seg, kp_seg[0], vp_seg[0],
+                                   rk_seg[0], rv_seg[0], x)
+                a_parts.append(kp2[None])
+                b_parts.append(vp2[None])
+            else:
+                def scan_body(carry, scanned, seg=seg):
+                    xx, = carry
+                    p_i, kp, vp, rk_i, rv_i = scanned
+                    xx, kp2, vp2 = body(seg, p_i, kp, vp, rk_i, rv_i, xx)
+                    return (xx,), (kp2, vp2)
+
+                (x,), (kp2, vp2) = jax.lax.scan(
+                    scan_body, (x,), (p_seg, kp_seg, vp_seg, rk_seg, rv_seg))
+                a_parts.append(kp2)
+                b_parts.append(vp2)
+            off += seg.n
+        if len(a_parts) == 1:
+            return x, a_parts[0], b_parts[0]
+        return x, jnp.concatenate(a_parts, 0), jnp.concatenate(b_parts, 0)
+
+    def _no_remote(self, dtype):
+        """Zero-token remote payload arrays (one per pool) for calls
+        without a zero-copy lease — shape (L, 0, *token_shape)."""
+        a, b = self.kv_layout.pools
+        L = self.nlayers
+        return (jnp.zeros((L, 0) + a.token_shape, dtype),
+                jnp.zeros((L, 0) + b.token_shape, dtype))
 
     @partial(jax.jit, static_argnums=(0,))
     def _prefill_chunk_fn(self, params, k_pages, v_pages, tokens, page_ids,
@@ -256,12 +330,18 @@ class PagedEngine:
         each query are masked, so stale contents past the chunk's end (and
         the pad pages, which sit at even higher positions) are never read.
 
-        Zero-copy remote prefix: ``rk``/``rv`` (L, R, Hkv, Dh) carry the
-        borrowed pages' K/V (gathered from the creditor instance's pools),
-        serving absolute positions ``[0, r_base)``; the local causal partial
-        and the remote partial are combined with the DistAttention
-        log-sum-exp merge. ``R = 0`` (the common case) keeps the original
-        single-softmax path bit-for-bit.
+        Zero-copy remote prefix: ``rk``/``rv`` (L, R, *token_shape) carry
+        the borrowed pages' payloads (gathered from the creditor instance's
+        pools — K/V for GQA, ckv/krope for MLA), serving absolute positions
+        ``[0, r_base)``; the local causal partial and the remote partial are
+        combined with the DistAttention log-sum-exp merge. ``R = 0`` (the
+        common case) keeps the original single-softmax path bit-for-bit.
+
+        MLA stacks scatter the *latent* per-token payload (ckv, krope) into
+        the two pools and attend with the matrix-absorbed effective
+        single-kv-head form (``mla_effective_kv``), so pages hold
+        ``kv_lora_rank + qk_rope_head_dim`` elements per token per layer
+        instead of ``2 * Hkv * Dh``.
 
         Returns (logits (V,) of the last real chunk position, k_pages,
         v_pages); callers ignore the logits for non-final chunks. Subsumes
@@ -283,50 +363,92 @@ class PagedEngine:
             valid_tok, page_ids[jnp.clip(loc_pos // ps, 0, npg - 1)],
             ecfg.num_pages)
         in_page = loc_pos % ps
-        seg = self.model.plan[0]
-        p_seg = params["segments"][0]
-        window = cfg.sliding_window if seg.attn_kind == "swa" else None
         x = embed(params["embed"], tokens)  # (1, s, d)
 
-        def layer(carry, scanned):
-            xx, = carry
-            # kp/vp: (P+1, ps, Hkv, Dh); rk_i/rv_i: (R, Hkv, Dh)
-            p_i, kp, vp, rk_i, rv_i = scanned
+        if self.flavor == "mla":
+            r_lat, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            scale = _mla_scale(cfg)
 
-            def attend(q, k, v):
-                kp2 = kp.at[tok_pages, in_page].set(k[0].astype(kp.dtype))
-                vp2 = vp.at[tok_pages, in_page].set(v[0].astype(vp.dtype))
-                kall = kp2[page_ids].reshape(
-                    1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
-                vall = vp2[page_ids].reshape(
-                    1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
-                if n_remote == 0:
-                    ctx = blockwise_attention(q, kall.astype(k.dtype),
-                                              vall.astype(v.dtype),
-                                              causal=True, window=window,
-                                              q_offset=start)
-                    return ctx, (kp2, vp2)
-                # zero-copy: local causal partial + remote partial, merged
-                # by log-sum-exp (DistAttention). Local keys sit at absolute
-                # positions r_base + [0, npg*ps); remote keys at [0, r_base)
-                # — all remote positions precede every chunk query, so only
-                # validity masks the remote side.
-                key_pos = r_base + jnp.arange(npg * ps)
-                mask_l = positions[None, :, None] >= key_pos[None, None, :]
-                o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
-                mask_r = (jnp.arange(n_remote) < r_base)[None, None, :] \
-                    & jnp.ones((1, s, 1), bool)
-                o_r, m_r, l_r = attention_partial(q, rk_i[None], rv_i[None],
-                                                  mask_r)
-                ctx = merge_partials_tree([o_l, o_r], [m_l, m_r],
-                                          [l_l, l_r])
-                return ctx.astype(q.dtype), (kp2, vp2)
+            def body(seg, p_i, cp, rp, rc_i, rr_i, xx):
+                # cp/rp: (P+1, ps, r) / (P+1, ps, dr) latent pools;
+                # rc_i/rr_i: (R, r) / (R, dr) borrowed latent payloads
 
-            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions, attend)
-            return (y,), (kp2, vp2)
+                def attend_latent(q_lat, qr, ckv_new, krope_new):
+                    cp2 = cp.at[tok_pages, in_page].set(
+                        ckv_new[0].astype(cp.dtype))
+                    rp2 = rp.at[tok_pages, in_page].set(
+                        krope_new[0].astype(rp.dtype))
+                    ckv_all = cp2[page_ids].reshape(1, npg * ps, r_lat)
+                    kr_all = rp2[page_ids].reshape(1, npg * ps, dr)
+                    q_eff, k_eff, v_eff = mla_effective_kv(
+                        q_lat, qr, ckv_all.astype(q_lat.dtype),
+                        kr_all.astype(q_lat.dtype))
+                    if n_remote == 0:
+                        ctx = blockwise_attention(q_eff, k_eff, v_eff,
+                                                  causal=True, q_offset=start,
+                                                  scale=scale)
+                    else:
+                        key_pos = r_base + jnp.arange(npg * ps)
+                        mask_l = positions[None, :, None] >= \
+                            key_pos[None, None, :]
+                        o_l, m_l, l_l = attention_partial(
+                            q_eff, k_eff, v_eff, mask_l, scale=scale)
+                        kr_eff, vr_eff = mla_effective_ctx(
+                            rc_i[None].astype(q_lat.dtype),
+                            rr_i[None].astype(q_lat.dtype))
+                        mask_r = (jnp.arange(n_remote) < r_base)[None, None, :] \
+                            & jnp.ones((1, s, 1), bool)
+                        o_r, m_r, l_r = attention_partial(
+                            q_eff, kr_eff, vr_eff, mask_r, scale=scale)
+                        ctx = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                                  [l_l, l_r])
+                    return ctx[..., :r_lat].astype(q_lat.dtype), (cp2, rp2)
 
-        (x,), (k_pages, v_pages) = jax.lax.scan(
-            layer, (x,), (p_seg, k_pages, v_pages, rk, rv))
+                y, (cp2, rp2) = mla_layer(cfg, p_i, xx, positions,
+                                          attend_latent,
+                                          mlp_fn=self._mlp_fn(seg))
+                return y, cp2, rp2
+        else:
+            def body(seg, p_i, kp, vp, rk_i, rv_i, xx):
+                window = cfg.sliding_window if seg.attn_kind == "swa" \
+                    else None
+
+                def attend(q, k, v):
+                    kp2 = kp.at[tok_pages, in_page].set(k[0].astype(kp.dtype))
+                    vp2 = vp.at[tok_pages, in_page].set(v[0].astype(vp.dtype))
+                    kall = kp2[page_ids].reshape(
+                        1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
+                    vall = vp2[page_ids].reshape(
+                        1, npg * ps, cfg.num_kv_heads, cfg.head_dim)
+                    if n_remote == 0:
+                        ctx = blockwise_attention(q, kall.astype(k.dtype),
+                                                  vall.astype(v.dtype),
+                                                  causal=True, window=window,
+                                                  q_offset=start)
+                        return ctx, (kp2, vp2)
+                    # zero-copy: local causal partial + remote partial,
+                    # merged by log-sum-exp (DistAttention). Local keys sit
+                    # at absolute positions r_base + [0, npg*ps); remote
+                    # keys at [0, r_base) — all remote positions precede
+                    # every chunk query, so only validity masks the remote
+                    # side.
+                    key_pos = r_base + jnp.arange(npg * ps)
+                    mask_l = positions[None, :, None] >= key_pos[None, None, :]
+                    o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
+                    mask_r = (jnp.arange(n_remote) < r_base)[None, None, :] \
+                        & jnp.ones((1, s, 1), bool)
+                    o_r, m_r, l_r = attention_partial(q, rk_i[None],
+                                                      rv_i[None], mask_r)
+                    ctx = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                              [l_l, l_r])
+                    return ctx.astype(q.dtype), (kp2, vp2)
+
+                y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions, attend,
+                                          mlp_fn=self._mlp_fn(seg))
+                return y, kp2, vp2
+
+        x, k_pages, v_pages = self._run_segments(params, k_pages, v_pages,
+                                                 rk, rv, x, body)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
         # logits of the last REAL chunk position (pad rows are garbage)
         last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
@@ -340,14 +462,15 @@ class PagedEngine:
         """Batched one-token step over slots.
 
         tokens: (n,), positions: (n,), block_tables: (n, max_pages),
-        ctx_lens: (n,) (0 = inactive slot). Returns (logits (n, V), pages)."""
+        ctx_lens: (n,) (0 = inactive slot). Returns (logits (n, V), pages).
+
+        GQA runs the Pallas/reference paged-attention kernel; MLA gathers
+        the latent pools and attends in the matrix-absorbed effective
+        single-kv-head form (the Pallas kernel is GQA-shaped)."""
         cfg = self.cfg
         ecfg = self.ecfg
         n = tokens.shape[0]
         ps = ecfg.page_size
-        seg = self.model.plan[0]
-        p_seg = params["segments"][0]
-        window = cfg.sliding_window if seg.attn_kind == "swa" else None
 
         x = embed(params["embed"], tokens[:, None])  # (n, 1, d)
         page_slot = block_tables[jnp.arange(n), positions // ps]  # (n,)
@@ -355,28 +478,59 @@ class PagedEngine:
         page_slot = jnp.where(ctx_lens > 0, page_slot, ecfg.num_pages)
         in_page = positions % ps
 
-        def layer(carry, scanned):
-            xx, = carry
-            p_i, kp, vp = scanned
+        if self.flavor == "mla":
+            r_lat, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            scale = _mla_scale(cfg)
 
-            def attend(q, k, v):
-                # write each slot's new K/V into its page, then paged
-                # attention over the block tables
-                kp2 = kp.at[page_slot, in_page].set(k[:, 0].astype(kp.dtype))
-                vp2 = vp.at[page_slot, in_page].set(v[:, 0].astype(vp.dtype))
-                att_fn = ops.paged_attention if ecfg.use_kernel \
-                    else ref.paged_attention_ref
-                att = att_fn(q[:, 0], kp2, vp2, block_tables, ctx_lens,
-                             page_size=ps, window=window)
-                return att.reshape(n, 1, cfg.num_heads, cfg.head_dim), \
-                    (kp2, vp2)
+            def body(seg, p_i, cp, rp, rc_i, rr_i, xx):
+                def attend_latent(q_lat, qr, ckv_new, krope_new):
+                    cp2 = cp.at[page_slot, in_page].set(
+                        ckv_new[:, 0].astype(cp.dtype))
+                    rp2 = rp.at[page_slot, in_page].set(
+                        krope_new[:, 0].astype(rp.dtype))
+                    ckv_all = cp2[block_tables].reshape(n, -1, r_lat)
+                    kr_all = rp2[block_tables].reshape(n, -1, dr)
+                    q_eff, k_eff, v_eff = mla_effective_kv(
+                        q_lat, qr, ckv_all.astype(q_lat.dtype),
+                        kr_all.astype(q_lat.dtype))
+                    s_loc = k_eff.shape[1]
+                    mask = (jnp.arange(s_loc)[None, :] <
+                            ctx_lens[:, None])[:, None, :]  # (n, 1, S)
+                    o, m, l = attention_partial(q_eff, k_eff, v_eff, mask,
+                                                scale=scale)
+                    ctx = merge_partials_tree([o], [m], [l])
+                    return ctx[..., :r_lat].astype(q_lat.dtype), (cp2, rp2)
 
-            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
-                                      attend)
-            return (y,), (kp2, vp2)
+                y, (cp2, rp2) = mla_layer(cfg, p_i, xx, positions[:, None],
+                                          attend_latent,
+                                          mlp_fn=self._mlp_fn(seg))
+                return y, cp2, rp2
+        else:
+            def body(seg, p_i, kp, vp, rk_i, rv_i, xx):
+                window = cfg.sliding_window if seg.attn_kind == "swa" \
+                    else None
 
-        (x,), (k_pages, v_pages) = jax.lax.scan(
-            layer, (x,), (p_seg, k_pages, v_pages))
+                def attend(q, k, v):
+                    # write each slot's new K/V into its page, then paged
+                    # attention over the block tables
+                    kp2 = kp.at[page_slot, in_page].set(
+                        k[:, 0].astype(kp.dtype))
+                    vp2 = vp.at[page_slot, in_page].set(
+                        v[:, 0].astype(vp.dtype))
+                    att_fn = ops.paged_attention if ecfg.use_kernel \
+                        else ref.paged_attention_ref
+                    att = att_fn(q[:, 0], kp2, vp2, block_tables, ctx_lens,
+                                 page_size=ps, window=window)
+                    return att.reshape(n, 1, cfg.num_heads, cfg.head_dim), \
+                        (kp2, vp2)
+
+                y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
+                                          attend, mlp_fn=self._mlp_fn(seg))
+                return y, kp2, vp2
+
+        rk, rv = self._no_remote(k_pages.dtype)
+        x, k_pages, v_pages = self._run_segments(params, k_pages, v_pages,
+                                                 rk, rv, x, body)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
         logits = unembed(params["embed"], x, cfg.vocab_size,
                          fp32=cfg.logits_fp32)[:, 0]
@@ -391,19 +545,19 @@ class PagedEngine:
 
         r_base: (n,) borrowed tokens per slot (0 = fully local — such slots
         reduce to the plain paged path numerically); rk, rv:
-        (L, n, R, Hkv, Dh) the borrowed pages' K/V gathered from each
-        creditor's pools, covering absolute positions ``[0, r_base[i])`` of
-        slot ``i``. Per layer, the local paged partial and the remote
-        partial are combined with the DistAttention log-sum-exp merge —
-        exactly the InfiniteLLM micro-attention aggregation, with the
-        borrower reading the creditor's pages in place of an RDMA fetch.
+        (L, n, R, *token_shape) the borrowed pages' payloads gathered from
+        each creditor's pools (K/V for GQA, ckv/krope for MLA), covering
+        absolute positions ``[0, r_base[i])`` of slot ``i``. Per layer, the
+        local paged partial and the remote partial are combined with the
+        DistAttention log-sum-exp merge — exactly the InfiniteLLM
+        micro-attention aggregation, with the borrower reading the
+        creditor's pages in place of an RDMA fetch.
         """
         cfg = self.cfg
         ecfg = self.ecfg
         n = tokens.shape[0]
         ps = ecfg.page_size
         n_remote = rk.shape[2]
-        p_seg = params["segments"][0]
 
         x = embed(params["embed"], tokens[:, None])  # (n, 1, d)
         loc_pos = jnp.maximum(positions - r_base, 0)  # write slot, local
@@ -412,34 +566,70 @@ class PagedEngine:
         page_slot = jnp.where(ctx_lens > 0, page_slot, ecfg.num_pages)
         in_page = loc_pos % ps
 
-        def layer(carry, scanned):
-            xx, = carry
-            p_i, kp, vp, rk_i, rv_i = scanned  # rk_i: (n, R, Hkv, Dh)
+        if self.flavor == "mla":
+            r_lat, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            scale = _mla_scale(cfg)
 
-            def attend(q, k, v):
-                kp2 = kp.at[page_slot, in_page].set(k[:, 0].astype(kp.dtype))
-                vp2 = vp.at[page_slot, in_page].set(v[:, 0].astype(vp.dtype))
-                kall = kp2[block_tables].reshape(
-                    n, -1, cfg.num_kv_heads, cfg.head_dim)
-                vall = vp2[block_tables].reshape(
-                    n, -1, cfg.num_kv_heads, cfg.head_dim)
-                s_loc = kall.shape[1]
-                mask_l = (jnp.arange(s_loc)[None, :] <
-                          loc_lens[:, None])[:, None, :]  # (n, 1, S_loc)
-                o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
-                mask_r = (jnp.arange(n_remote)[None, :] <
-                          r_base[:, None])[:, None, :]
-                o_r, m_r, l_r = attention_partial(q, rk_i, rv_i, mask_r)
-                att = merge_partials_tree([o_l, o_r], [m_l, m_r],
-                                          [l_l, l_r])  # (n, 1, H, Dh)
-                return att.astype(q.dtype), (kp2, vp2)
+            def body(seg, p_i, cp, rp, rc_i, rr_i, xx):
+                # rc_i: (n, R, r), rr_i: (n, R, dr)
+                def attend_latent(q_lat, qr, ckv_new, krope_new):
+                    cp2 = cp.at[page_slot, in_page].set(
+                        ckv_new[:, 0].astype(cp.dtype))
+                    rp2 = rp.at[page_slot, in_page].set(
+                        krope_new[:, 0].astype(rp.dtype))
+                    ckv_all = cp2[block_tables].reshape(n, -1, r_lat)
+                    kr_all = rp2[block_tables].reshape(n, -1, dr)
+                    q_eff, k_eff, v_eff = mla_effective_kv(
+                        q_lat, qr, ckv_all.astype(q_lat.dtype),
+                        kr_all.astype(q_lat.dtype))
+                    s_loc = k_eff.shape[1]
+                    mask_l = (jnp.arange(s_loc)[None, :] <
+                              loc_lens[:, None])[:, None, :]
+                    o_l, m_l, l_l = attention_partial(q_eff, k_eff, v_eff,
+                                                      mask_l, scale=scale)
+                    kr_eff, vr_eff = mla_effective_ctx(
+                        rc_i.astype(q_lat.dtype), rr_i.astype(q_lat.dtype))
+                    mask_r = (jnp.arange(n_remote)[None, :] <
+                              r_base[:, None])[:, None, :]
+                    o_r, m_r, l_r = attention_partial(q_eff, kr_eff, vr_eff,
+                                                      mask_r, scale=scale)
+                    att = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                              [l_l, l_r])
+                    return att[..., :r_lat].astype(q_lat.dtype), (cp2, rp2)
 
-            y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
-                                      attend)
-            return (y,), (kp2, vp2)
+                y, (cp2, rp2) = mla_layer(cfg, p_i, xx, positions[:, None],
+                                          attend_latent,
+                                          mlp_fn=self._mlp_fn(seg))
+                return y, cp2, rp2
+        else:
+            def body(seg, p_i, kp, vp, rk_i, rv_i, xx):
+                # rk_i: (n, R, Hkv, Dh)
+                def attend(q, k, v):
+                    kp2 = kp.at[page_slot, in_page].set(
+                        k[:, 0].astype(kp.dtype))
+                    vp2 = vp.at[page_slot, in_page].set(
+                        v[:, 0].astype(vp.dtype))
+                    kall = kp2[block_tables].reshape(
+                        n, -1, cfg.num_kv_heads, cfg.head_dim)
+                    vall = vp2[block_tables].reshape(
+                        n, -1, cfg.num_kv_heads, cfg.head_dim)
+                    s_loc = kall.shape[1]
+                    mask_l = (jnp.arange(s_loc)[None, :] <
+                              loc_lens[:, None])[:, None, :]  # (n, 1, S_loc)
+                    o_l, m_l, l_l = attention_partial(q, kall, vall, mask_l)
+                    mask_r = (jnp.arange(n_remote)[None, :] <
+                              r_base[:, None])[:, None, :]
+                    o_r, m_r, l_r = attention_partial(q, rk_i, rv_i, mask_r)
+                    att = merge_partials_tree([o_l, o_r], [m_l, m_r],
+                                              [l_l, l_r])  # (n, 1, H, Dh)
+                    return att.astype(q.dtype), (kp2, vp2)
 
-        (x,), (k_pages, v_pages) = jax.lax.scan(
-            layer, (x,), (p_seg, k_pages, v_pages, rk, rv))
+                y, (kp2, vp2) = gqa_layer(cfg, p_i, xx, positions[:, None],
+                                          attend, mlp_fn=self._mlp_fn(seg))
+                return y, kp2, vp2
+
+        x, k_pages, v_pages = self._run_segments(params, k_pages, v_pages,
+                                                 rk, rv, x, body)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
         logits = unembed(params["embed"], x, cfg.vocab_size,
                          fp32=cfg.logits_fp32)[:, 0]
@@ -499,21 +689,25 @@ class PagedEngine:
                 "window attention (the remote partial ignores the window)")
 
     def _lease_kv(self, lease):
-        """(L, R, Hkv, Dh) K/V of a lease's borrowed pages, gathered from
-        the creditor's pools ONCE per lease and cached: the pages are
-        pinned on the board, refcounted through the home allocator, and
-        never written (any writer COWs a shared page first), so their
-        contents are immutable for the lease's lifetime — re-gathering per
-        decode step would put a pool-sized gather on the hot path."""
+        """(L, R, *token_shape) payloads of a lease's borrowed pages (one
+        array per pool), gathered from the creditor's pools ONCE per lease
+        and cached: the pages are pinned on the board, refcounted through
+        the home allocator, and never written (any writer COWs a shared
+        page first), so their contents are immutable for the lease's
+        lifetime — re-gathering per decode step would put a pool-sized
+        gather on the hot path."""
         key = id(lease)
         hit = self._lease_kv_cache.get(key)
         if hit is None:
+            check_schema(self.kv_layout.schema,
+                         getattr(lease, "schema", None),
+                         where="zero-copy lease read")
             hk, hv = self.remote_reader(lease.home)
             idx = jnp.asarray(lease.blocks, jnp.int32)
-            L, hkv, dh = (self.nlayers, self.cfg.num_kv_heads,
-                          self.cfg.head_dim)
-            hit = (hk[:, idx].reshape(L, -1, hkv, dh),
-                   hv[:, idx].reshape(L, -1, hkv, dh))
+            L = self.nlayers
+            pa, pb = self.kv_layout.pools
+            hit = (hk[:, idx].reshape((L, -1) + pa.token_shape),
+                   hv[:, idx].reshape((L, -1) + pb.token_shape))
             self._lease_kv_cache[key] = hit
         return hit
 
@@ -523,27 +717,29 @@ class PagedEngine:
             del self._lease_kv_cache[key]
 
     def _lease_kv_chunk(self, lease):
-        """(L, Rpad, Hkv, Dh) borrowed K/V, pow2-padded (pad tokens are
-        masked by ``r_base`` inside the jitted chunk fn)."""
+        """(L, Rpad, *token_shape) borrowed payloads, pow2-padded (pad
+        tokens are masked by ``r_base`` inside the jitted chunk fn)."""
         k, v = self._lease_kv(lease)
         pad = _pow2_bucket(lease.num_pages, 1) * self.ecfg.page_size \
             - lease.num_tokens
         if pad:
-            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+            v = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
         return k, v
 
     def _lease_kv_batch(self, row_reqs):
-        """(L, n, Rpad, Hkv, Dh) stacked borrowed K/V for a decode batch
-        (zero rows for slots without a lease)."""
+        """(L, n, Rpad, *token_shape) stacked borrowed payloads for a
+        decode batch (zero rows for slots without a lease)."""
         leases = self.scheduler.leases
-        L, hkv, dh = self.nlayers, self.cfg.num_kv_heads, self.cfg.head_dim
+        L = self.nlayers
+        pa, pb = self.kv_layout.pools
         rmax = max(leases[r.request_id].num_pages for r in row_reqs
                    if r is not None and r.request_id in leases)
         rpad = _pow2_bucket(rmax, 1) * self.ecfg.page_size
-        rk = jnp.zeros((L, self.ecfg.max_slots, rpad, hkv, dh),
+        rk = jnp.zeros((L, self.ecfg.max_slots, rpad) + pa.token_shape,
                        self.k_pages.dtype)
-        rv = jnp.zeros_like(rk)
+        rv = jnp.zeros((L, self.ecfg.max_slots, rpad) + pb.token_shape,
+                       self.v_pages.dtype)
         for slot, req in enumerate(row_reqs):
             if req is None or req.request_id not in leases:
                 continue
@@ -685,9 +881,7 @@ class PagedEngine:
                 rk, rv = self._lease_kv_chunk(
                     self.scheduler.leases[req.request_id])
             else:
-                rk = jnp.zeros((self.nlayers, 0, self.cfg.num_kv_heads,
-                                self.cfg.head_dim), self.k_pages.dtype)
-                rv = rk
+                rk, rv = self._no_remote(self.k_pages.dtype)
             t_chunk0 = time.monotonic() if tr is not None else 0.0
             logits, self.k_pages, self.v_pages = self._prefill_chunk_fn(
                 self.params, self.k_pages, self.v_pages,
@@ -871,24 +1065,33 @@ class PagedEngine:
     # -- cross-instance prefix sharing -------------------------------------------
 
     def export_page_payload(self, block: int):
-        """KV contents of one physical page as host arrays — the payload a
-        cluster router publishes to the distkv board so a peer engine (same
-        arch + params) can adopt the page without recomputing it."""
-        return (np.asarray(self.k_pages[:, block]),
+        """KV contents of one physical page as host arrays, tagged with the
+        engine's :attr:`KVPageLayout.schema` — the payload a cluster router
+        publishes to the distkv board so a peer engine (same arch + params)
+        can adopt the page without recomputing it. An importer with a
+        different layout refuses the payload loudly."""
+        return (self.kv_layout.schema,
+                np.asarray(self.k_pages[:, block]),
                 np.asarray(self.v_pages[:, block]))
 
     def import_page_payloads(self, blocks, payloads) -> None:
         """Materialize published pages into freshly adopted local blocks
-        (counterpart of :meth:`export_page_payload`). Batched: one update
-        per KV pool regardless of page count — ``.at[].set`` outside jit
-        copies the whole pool, so per-page calls would copy it 2x per page
-        (same batching the COW path in :meth:`step` uses)."""
+        (counterpart of :meth:`export_page_payload`). Every payload's
+        schema tag is validated against the local layout before any pool is
+        touched — reinterpreting foreign-layout bytes would corrupt pages
+        silently. Batched: one update per KV pool regardless of page count
+        — ``.at[].set`` outside jit copies the whole pool, so per-page
+        calls would copy it 2x per page (same batching the COW path in
+        :meth:`step` uses)."""
         if not blocks:
             return
+        for p in payloads:
+            check_schema(self.kv_layout.schema, p[0],
+                         where="page-payload import")
         idx = jnp.asarray(list(blocks), jnp.int32)
-        k = jnp.stack([jnp.asarray(p[0], self.k_pages.dtype)
-                       for p in payloads], axis=1)  # (L, n, ps, Hkv, Dh)
-        v = jnp.stack([jnp.asarray(p[1], self.v_pages.dtype)
+        k = jnp.stack([jnp.asarray(p[1], self.k_pages.dtype)
+                       for p in payloads], axis=1)  # (L, n, ps, *token_shape)
+        v = jnp.stack([jnp.asarray(p[2], self.v_pages.dtype)
                        for p in payloads], axis=1)
         self.k_pages = self.k_pages.at[:, idx].set(k)
         self.v_pages = self.v_pages.at[:, idx].set(v)
@@ -918,6 +1121,9 @@ class PagedEngine:
         lease, whose full pages stay on the prefill host)."""
         if lease is not None:
             self._check_zero_copy_ok()
+            check_schema(self.kv_layout.schema,
+                         getattr(lease, "schema", None),
+                         where="KV handoff install")
         slot = self.free_slots.pop()
         self.slots[req.request_id] = slot
         # the decode input token is the first token, sampled on the prefill

@@ -286,6 +286,18 @@ class RouterBackend:
                 raise ValueError(
                     f"prefix_share needs one page size across instances, "
                     f"got {sorted(sizes)}")
+            # page *size* alone does not make pages interchangeable: the
+            # per-token payload schema (KVPageLayout) must match too — a
+            # GQA home's K/V page adopted into an MLA peer's latent pool
+            # (or vice versa) would be silently-reinterpreted garbage
+            schemas = {c.kv_layout.schema for c in self.children
+                       if getattr(c, "kv_layout", None) is not None}
+            if len(schemas) > 1:
+                raise ValueError(
+                    f"KV layout schema mismatch across prefix_share "
+                    f"instances: {sorted(schemas)} — cross-instance page "
+                    "payloads are only interchangeable between identical "
+                    "layouts")
             for i, child in enumerate(self.children):
                 child.prefix_cache.track_hot = True
                 if share_mode != "zero_copy":
@@ -418,12 +430,25 @@ class RouterBackend:
             pc.peer_restore_fn = self._make_peer_restorer(i)
             pc.peer_drop_fn = self._make_peer_dropper(i)
 
+    def _kv_page_bytes(self, i: int):
+        """True bytes per KV page on child ``i`` (from its allocator's
+        KVPageLayout), or None to fall back on the NetworkModel's default —
+        compressed layouts (MLA latent pages) move ~10x fewer bytes than
+        the GQA default would charge."""
+        return getattr(getattr(self.children[i], "allocator", None),
+                       "page_bytes", None)
+
+    def _net_bytes(self, i: int, n_pages: int) -> int:
+        pb = self._kv_page_bytes(i)
+        return n_pages * (pb if pb is not None else self.net.page_bytes)
+
     def _charge_peer_copy(self, i: int, n_pages: int) -> None:
         if self.net is None:
             return
         charge = getattr(self.children[i], "charge_network", None)
         if charge is not None:
-            charge(self.net.peer_copy_time(n_pages))
+            charge(self.net.peer_copy_time(
+                n_pages, page_bytes=self._kv_page_bytes(i)))
 
     def _make_peer_spiller(self, i: int):
         child = self.children[i]
@@ -509,8 +534,11 @@ class RouterBackend:
                 have = board.covered(tokens)
                 payloads = [None] * have + \
                     [self._export_payload(child, b) for b in blocks[have:]]
+            layout = getattr(child, "kv_layout", None)
             board.publish(i, tokens, payloads, pc.page_size,
-                          blocks=blocks if lend else None)
+                          blocks=blocks if lend else None,
+                          schema=layout.schema if layout is not None
+                          else None)
 
     def _make_importer(self, i: int):
         """The child scheduler's adopt-imported-pages hook: given a prompt
@@ -548,15 +576,17 @@ class RouterBackend:
                     # clock, engines record net_time)
                     charge = getattr(child, "charge_network", None)
                     if charge is not None:
-                        charge(self.net.page_copy_time(len(adopted)))
+                        charge(self.net.page_copy_time(
+                            len(adopted),
+                            page_bytes=self._kv_page_bytes(i)))
                     m = getattr(child, "metrics", None)
                     if m is not None:
                         m.count("net_bytes",
-                                len(adopted) * self.net.page_bytes)
+                                self._net_bytes(i, len(adopted)))
                 if self.trace is not None:
                     self.trace.instant(
                         "net", "copy", dst=i, pages=len(adopted),
-                        bytes=len(adopted) * self.net.page_bytes
+                        bytes=self._net_bytes(i, len(adopted))
                         if self.net is not None else 0)
             return len(adopted)
 
@@ -602,7 +632,8 @@ class RouterBackend:
                 return None  # prefix now lives here — serve it locally
             if self.share_mode == "auto" and not self.net.prefer_borrow(
                     len(usable), pc.page_size, req.max_new_tokens,
-                    expected_reuse=prior + 1):
+                    expected_reuse=prior + 1,
+                    page_bytes=self._kv_page_bytes(i)):
                 # copying pays off — let the importer run. The board's
                 # (instance, prefix) lease hit-count is the reuse estimate:
                 # the copy is paid once but amortized over the repeats this
@@ -664,10 +695,11 @@ class RouterBackend:
         if self.net is not None:
             charge = getattr(child, "charge_network", None)
             if charge is not None:
-                charge(self.net.page_copy_time(len(adopted)))
+                charge(self.net.page_copy_time(
+                    len(adopted), page_bytes=self._kv_page_bytes(i)))
             m = getattr(child, "metrics", None)
             if m is not None:
-                m.count("net_bytes", len(adopted) * self.net.page_bytes)
+                m.count("net_bytes", self._net_bytes(i, len(adopted)))
         self.promotions += 1
         if self.trace is not None:
             self.trace.instant("net", "promote", dst=i, home=home,

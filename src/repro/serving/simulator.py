@@ -292,6 +292,7 @@ class SimBackend:
                  cache_spill_pages: int = 0,
                  cost: Optional[CostModel] = None,
                  net: Optional[NetworkModel] = None,
+                 layout=None,
                  trace: bool = False):
         self.cost = cost or CostModel()
         # network/serialization model for cross-instance KV movement: the
@@ -305,6 +306,16 @@ class SimBackend:
         # the interconnect model is off (swap traffic rides host PCIe, not
         # the network; only the bandwidth figure is shared via NetworkModel)
         self.swap_net = net if net is not None else NetworkModel()
+        # layout (optional KVPageLayout): the simulated arch's page-payload
+        # schema. When set, every swap/copy charge uses the layout's true
+        # bytes per page instead of the NetworkModel default — compressed
+        # layouts (MLA latent pages) move ~10x fewer bytes, which flips
+        # should_swap / victim_policy="cost" decisions at the margin. None
+        # keeps the default-bytes behavior (and the committed swap-sweep
+        # baselines) bit-identical.
+        self.kv_layout = layout
+        self.kv_page_bytes = layout.page_bytes(block_size) \
+            if layout is not None else None
         self.swap_time_s = 0.0
         self.swapped_out = 0
         self.swapped_in = 0
@@ -314,7 +325,8 @@ class SimBackend:
         self.swap_overlap = swap_overlap
         self.swap_cancels = 0
         self.allocator = BlockAllocator(num_blocks, block_size,
-                                        host_blocks=host_blocks)
+                                        host_blocks=host_blocks,
+                                        layout=layout)
         self.prefix_cache = PrefixCache(
             self.allocator, spill_budget=cache_spill_pages) if prefix_cache \
             else None
@@ -361,7 +373,8 @@ class SimBackend:
         ctx = req.prefilled_len + req.n_generated
         recompute = self.cost.c_token * ctx + \
             self.cost.c_ctx * self.cost.prefill_read_tokens(0, ctx)
-        return 2.0 * self.swap_net.swap_time(n_pages) < recompute
+        return 2.0 * self.swap_net.swap_time(
+            n_pages, page_bytes=self.kv_page_bytes) < recompute
 
     def _victim_cost(self, req: Request, table) -> float:
         """victim_policy="cost" raw eviction bill: the modeled cost of
@@ -372,7 +385,8 @@ class SimBackend:
         n = len(table.blocks)
         ctx = min(req.prefilled_len, table.num_tokens) + req.n_generated
         if self._swap_worth_it(req, n):
-            return 2.0 * self.swap_net.swap_time(n)
+            return 2.0 * self.swap_net.swap_time(
+                n, page_bytes=self.kv_page_bytes)
         return self.cost.c_token * ctx + \
             self.cost.c_ctx * self.cost.prefill_read_tokens(0, ctx)
 
@@ -413,8 +427,10 @@ class SimBackend:
         in_pages = sum(len(p) for _, p in plan.swap_in)
         t_swap = 0.0
         if out_pages or in_pages:
-            t_swap = self.swap_net.swap_time(out_pages) + \
-                self.swap_net.swap_time(in_pages)
+            t_swap = self.swap_net.swap_time(
+                out_pages, page_bytes=self.kv_page_bytes) + \
+                self.swap_net.swap_time(in_pages,
+                                        page_bytes=self.kv_page_bytes)
             self.swap_time_s += t_swap
         self.swapped_out += len(plan.swap_out) + len(plan.swap_complete)
         self.swapped_in += len(plan.swap_in)

@@ -27,7 +27,8 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.configs import smoke_config
-from repro.core.paging import BlockAllocator, OutOfBlocks, OutOfHostBlocks
+from repro.core.paging import (BlockAllocator, KVPageLayout, OutOfBlocks,
+                               OutOfHostBlocks)
 from repro.core.prefixcache import PrefixCache
 from repro.core.scheduling import IterationScheduler, Phase, Request
 from repro.core.scheduling.iteration import (SWAP_MODES, VICTIM_POLICIES,
@@ -455,13 +456,21 @@ def test_mid_prefill_victim_banks_completed_chunks():
 
 # -- sim: conservation property + crossover plumbing ---------------------------
 
+# page-payload layouts the ledgers must be agnostic to: the classic GQA
+# K/V schema and the compressed MLA latent schema (satellite: conservation
+# parameterized over layouts — bytes change, accounting must not)
+_LAYOUTS = (KVPageLayout.from_arch(smoke_config("h2o-danube-1.8b")),
+            KVPageLayout.from_arch(smoke_config("deepseek-v2-236b")))
+
+
 def _check_conservation(num_blocks, host_blocks, seed, swap_overlap,
-                        speculative_swap):
+                        speculative_swap, layout=None):
     backend = SimBackend(num_blocks=num_blocks, block_size=PS,
                          max_running=8, max_tokens_per_iter=128,
                          host_blocks=host_blocks, swap_mode="swap",
                          swap_overlap=swap_overlap,
-                         speculative_swap=speculative_swap)
+                         speculative_swap=speculative_swap,
+                         layout=layout)
     for r in make_workload(12, rate=200.0, dist="alpaca", seed=seed,
                            max_len=num_blocks * PS // 2):
         backend.add_request(r)
@@ -486,26 +495,30 @@ def _check_conservation(num_blocks, host_blocks, seed, swap_overlap,
 @settings(max_examples=10, deadline=None)
 @given(num_blocks=st.integers(16, 48), host_blocks=st.integers(8, 64),
        seed=st.integers(0, 10_000), swap_overlap=st.booleans(),
-       speculative_swap=st.booleans())
+       speculative_swap=st.booleans(), mla_layout=st.booleans())
 def test_sim_page_conservation_every_iteration(num_blocks, host_blocks,
                                                seed, swap_overlap,
-                                               speculative_swap):
+                                               speculative_swap, mla_layout):
     """Property: the device ledger (used + free == total, in-flight pages
     counted used) and the host ledger (swapped + free == total) hold after
-    EVERY sim iteration, for any pressure pattern the workload generates
-    and any overlap/speculation setting."""
+    EVERY sim iteration, for any pressure pattern the workload generates,
+    any overlap/speculation setting, and either page layout."""
     _check_conservation(num_blocks, host_blocks, seed, swap_overlap,
-                        speculative_swap)
+                        speculative_swap, layout=_LAYOUTS[mla_layout])
 
 
+@pytest.mark.parametrize("layout", [None, *_LAYOUTS],
+                         ids=["default", "gqa", "mla"])
 @pytest.mark.parametrize("swap_overlap,speculative_swap",
                          [(False, False), (True, False), (True, True)])
-def test_sim_page_conservation_examples(swap_overlap, speculative_swap):
+def test_sim_page_conservation_examples(swap_overlap, speculative_swap,
+                                        layout):
     """Example-based companion to the property above so the invariants
-    (including the overlapped/speculative paths) are exercised even where
-    hypothesis is unavailable."""
+    (including the overlapped/speculative paths and both layouts) are
+    exercised even where hypothesis is unavailable."""
     for seed in (7, 1234):
-        _check_conservation(24, 16, seed, swap_overlap, speculative_swap)
+        _check_conservation(24, 16, seed, swap_overlap, speculative_swap,
+                            layout)
 
 
 def test_sim_swap_counters_and_result_fields():

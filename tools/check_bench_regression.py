@@ -1,19 +1,28 @@
-"""Bench-regression guard: fresh BENCH_swap_sweep.json vs committed baseline.
+"""Bench-regression guard: fresh BENCH_<slug>.json vs committed baseline.
 
-CI copies the checkout's committed ``bench_out/BENCH_swap_sweep.json`` aside
+CI copies the checkout's committed ``bench_out/BENCH_<slug>.json`` aside
 BEFORE ``benchmarks/run.py`` overwrites the directory, then calls this tool
-to compare the fresh artifact against it. Two classes of check:
+to compare the fresh artifact against it. The comparison dispatches on the
+artifact's ``name`` field; two sweeps are guarded:
 
-* **Tolerance band** — every metric key present in BOTH artifacts must not
-  regress by more than ``--tolerance`` (relative): throughputs may not drop,
-  P99 normalized latencies may not rise. The sim is virtual-clock
-  deterministic, so the band only absorbs intentional model recalibration;
-  improvements always pass.
-* **Overlap headline** — the long-point ``swap-overlap-cost`` row (overlapped
-  PCIe transfers + cost-ranked victims) must beat the baseline's serial
-  ``swap`` row: ≥ +5% throughput, OR lower P99 normalized latency at equal-
-  or-better throughput. This is the PR acceptance criterion, kept green
-  forever after.
+``swap_sweep``
+  * **Tolerance band** — every metric key present in BOTH artifacts must
+    not regress by more than ``--tolerance`` (relative): throughputs may
+    not drop, P99 normalized latencies may not rise. The sim is
+    virtual-clock deterministic, so the band only absorbs intentional
+    model recalibration; improvements always pass.
+  * **Overlap headline** — the long-point ``swap-overlap-cost`` row
+    (overlapped PCIe transfers + cost-ranked victims) must beat the
+    baseline's serial ``swap`` row: ≥ +5% throughput, OR lower P99
+    normalized latency at equal-or-better throughput.
+
+``mla_sweep``
+  * **Tolerance band** — per-layout throughput may not drop, P99 may not
+    rise, beyond ``--tolerance``.
+  * **Latent headline** — the fresh run's latent layout must hold ≥ 5x
+    fewer KV bytes/token than GQA (it is ~57x on the deepseek-v2-236b
+    geometry) AND beat the GQA run's throughput at the long-context
+    point. This is the PR acceptance criterion, kept green forever after.
 
     python tools/check_bench_regression.py BASELINE FRESH [--tolerance 0.02]
 
@@ -26,36 +35,38 @@ import argparse
 import json
 import sys
 
-HEADLINE_GAIN = 1.05  # +5% throughput branch of the headline check
+HEADLINE_GAIN = 1.05   # +5% throughput branch of the swap headline check
+MLA_MIN_RATIO = 5.0    # latent layouts must compress at least this much
 
 
 def _load(path):
     with open(path) as f:
-        return json.load(f)["metrics"]
+        data = json.load(f)
+    return data.get("name", ""), data["metrics"]
 
 
-def compare(base: dict, fresh: dict, tolerance: float) -> list:
-    """Returns a list of human-readable regressions (empty ⇒ pass)."""
+def _band(base, fresh, group, higher_is_better, tolerance, problems):
+    b, f = base.get(group) or {}, fresh.get(group) or {}
+    for key in sorted(set(b) & set(f)):
+        bv, fv = b[key], f[key]
+        if bv <= 0:
+            continue
+        rel = fv / bv - 1.0
+        bad = rel < -tolerance if higher_is_better else rel > tolerance
+        arrow = "REGRESSION" if bad else "ok"
+        print(f"  {group}[{key}]: {bv:.6g} -> {fv:.6g} "
+              f"({rel:+.2%}) {arrow}")
+        if bad:
+            problems.append(f"{group}[{key}] regressed {rel:+.2%} "
+                            f"(tolerance {tolerance:.0%})")
+
+
+def compare_swap(base: dict, fresh: dict, tolerance: float) -> list:
+    """swap_sweep: tolerance bands + the overlap headline."""
     problems = []
-
-    def band(group, higher_is_better):
-        b, f = base.get(group) or {}, fresh.get(group) or {}
-        for key in sorted(set(b) & set(f)):
-            bv, fv = b[key], f[key]
-            if bv <= 0:
-                continue
-            rel = fv / bv - 1.0
-            bad = rel < -tolerance if higher_is_better else rel > tolerance
-            arrow = "REGRESSION" if bad else "ok"
-            print(f"  {group}[{key}]: {bv:.6g} -> {fv:.6g} "
-                  f"({rel:+.2%}) {arrow}")
-            if bad:
-                problems.append(f"{group}[{key}] regressed {rel:+.2%} "
-                                f"(tolerance {tolerance:.0%})")
-
-    band("long_throughput", higher_is_better=True)
-    band("short_throughput", higher_is_better=True)
-    band("long_p99_norm_lat", higher_is_better=False)
+    _band(base, fresh, "long_throughput", True, tolerance, problems)
+    _band(base, fresh, "short_throughput", True, tolerance, problems)
+    _band(base, fresh, "long_p99_norm_lat", False, tolerance, problems)
 
     if not fresh.get("reprefill_ok", False):
         problems.append("no-re-prefill proof failed in the fresh run")
@@ -83,18 +94,60 @@ def compare(base: dict, fresh: dict, tolerance: float) -> list:
     return problems
 
 
+def compare_mla(base: dict, fresh: dict, tolerance: float) -> list:
+    """mla_sweep: per-layout tolerance bands + the latent headline."""
+    problems = []
+    _band(base, fresh, "throughput", True, tolerance, problems)
+    _band(base, fresh, "p99_norm_lat", False, tolerance, problems)
+
+    ratio = fresh.get("compression_ratio") or 0.0
+    print(f"  compression_ratio: {ratio:.1f}x (needs >= {MLA_MIN_RATIO:g}x)")
+    if ratio < MLA_MIN_RATIO:
+        problems.append(f"latent compression ratio {ratio:.2f}x is below "
+                        f"the {MLA_MIN_RATIO:g}x acceptance floor")
+
+    thr = fresh.get("throughput") or {}
+    gqa_thr, mla_thr = thr.get("gqa"), thr.get("mla")
+    done = fresh.get("completed") or {}
+    if None in (gqa_thr, mla_thr):
+        problems.append("headline rows missing: need fresh gqa and mla "
+                        "throughput metrics")
+    else:
+        print(f"  headline: mla {mla_thr:.2f} tok/s vs gqa {gqa_thr:.2f} "
+              f"({mla_thr / max(gqa_thr, 1e-9) - 1:+.2%})")
+        if not mla_thr > gqa_thr:
+            problems.append("latent layout does not beat GQA throughput at "
+                            "the long-context point")
+        if done.get("mla", 0) < done.get("gqa", 0):
+            problems.append("latent run completed fewer requests than GQA")
+    return problems
+
+
+COMPARATORS = {"swap_sweep": compare_swap, "mla_sweep": compare_mla}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="compare a fresh BENCH_swap_sweep.json to the baseline")
+        description="compare a fresh BENCH_<slug>.json to its baseline")
     ap.add_argument("baseline", help="committed baseline artifact")
     ap.add_argument("fresh", help="freshly produced artifact")
     ap.add_argument("--tolerance", type=float, default=0.02, metavar="FRAC",
                     help="relative regression band (default 0.02)")
     args = ap.parse_args()
-    base, fresh = _load(args.baseline), _load(args.fresh)
+    base_name, base = _load(args.baseline)
+    fresh_name, fresh = _load(args.fresh)
+    name = fresh_name or base_name
+    if name not in COMPARATORS:
+        print(f"no comparator for artifact {name!r} "
+              f"(known: {sorted(COMPARATORS)})", file=sys.stderr)
+        raise SystemExit(2)
+    if base_name and fresh_name and base_name != fresh_name:
+        print(f"artifact mismatch: baseline is {base_name!r}, fresh is "
+              f"{fresh_name!r}", file=sys.stderr)
+        raise SystemExit(2)
     print(f"comparing {args.fresh} against {args.baseline} "
           f"(tolerance {args.tolerance:.0%})")
-    problems = compare(base, fresh, args.tolerance)
+    problems = COMPARATORS[name](base, fresh, args.tolerance)
     if problems:
         print("\nbench regressions:", file=sys.stderr)
         for p in problems:
